@@ -1,0 +1,52 @@
+"""Paper Fig. 10: CGRA power / max frequency / efficiency vs VDD.
+
+The calibrated model must hit the paper's anchor measurements:
+  (a) power 4.4 mW @ 0.6 V -> 43 mW @ 1.0 V,
+  (b) fmax 21 MHz @ 0.6 V -> 105 MHz @ 1.0 V,
+  (c) efficiency peaks ~360 GOPS/W @ 0.6 V, falls to ~154 GOPS/W
+      near 0.95-1.0 V (dynamic power grows faster than throughput).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.energy import cgra_power_mw, efficiency_gops_w, freq_mhz
+
+from benchmarks.common import fmt_table, save
+
+
+def run(verbose: bool = True) -> dict:
+    vdds = np.round(np.arange(0.6, 1.01, 0.05), 2)
+    rows, data = [], {}
+    for v in vdds:
+        p = cgra_power_mw(float(v))
+        f = freq_mhz(float(v))
+        e = efficiency_gops_w(float(v))
+        data[float(v)] = {"power_mw": p, "freq_mhz": f, "gops_w": e}
+        rows.append([v, f"{p:.1f}", f"{f:.0f}", f"{e:.0f}"])
+    e06, e10 = data[0.6]["gops_w"], data[1.0]["gops_w"]
+    claims = {
+        "power_anchors": (abs(data[0.6]["power_mw"] - 4.4) < 0.5
+                          and abs(data[1.0]["power_mw"] - 43.0) < 2.0),
+        "freq_anchors": (abs(data[0.6]["freq_mhz"] - 21) < 1.0
+                         and abs(data[1.0]["freq_mhz"] - 105) < 1.0),
+        "efficiency_peak_at_0p6": e06 == max(d["gops_w"]
+                                             for d in data.values()),
+        "efficiency_near_360_at_0p6": 320 <= e06 <= 400,
+        "efficiency_falls_toward_154": 140 <= e10 <= 200,
+    }
+    payload = {"data": {str(k): v for k, v in data.items()}, "claims": claims}
+    save("fig10_voltage", payload)
+    if verbose:
+        print("== Fig. 10: power / fmax / efficiency vs VDD (PACE model) ==")
+        print(fmt_table(["VDD", "P(mW)", "f(MHz)", "GOPS/W"], rows))
+        print("claims:", claims)
+    return payload
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 9: spatial vs spatio-temporal CGRA mapping quality.
+
+The spatial architecture (Snafu-like: each op statically owns a PE, no
+time multiplexing; DFGs larger than the array are split into subgraphs
+executed to completion one after another) is compared against the
+spatio-temporal HyCUBE on the same kernels.  Paper claim: the spatial
+architecture exhibits an EQUAL OR HIGHER II than the spatio-temporal
+counterpart across all benchmarks (it trades performance for the power
+saved by eliminating configuration memory).
+"""
+from __future__ import annotations
+
+from repro.core.adl import hycube, spatial
+from repro.core.dfg import apply_layout, plan_layout
+from repro.core.kernel_lib import KERNELS
+from repro.core.mapper import map_dfg, spatial_ii
+
+from benchmarks.common import fmt_table, save
+
+PAPER_KERNELS = ("fft", "adpcm", "aes", "disparity", "dct", "nw", "gemm")
+KERNEL_ORDER = PAPER_KERNELS + ("jax_poly",)
+
+
+def run(seed: int = 0, verbose: bool = True) -> dict:
+    fab_st = hycube(4, 4)
+    fab_sp = spatial(4, 4)
+    rows, data = [], {}
+    for name in KERNEL_ORDER:
+        dfg, _, _ = KERNELS[name]()
+        layout = plan_layout(dfg)
+        laid = apply_layout(dfg, layout)
+        res = map_dfg(laid, fab_st, seed=seed, max_restarts=12)
+        ii_st = res.II if res.success else -1
+        ii_sp, n_parts = spatial_ii(laid, fab_sp)
+        data[name] = {"st_ii": ii_st, "spatial_ii": ii_sp,
+                      "spatial_subgraphs": n_parts,
+                      "nodes": len(dfg.nodes)}
+        rows.append([name, len(dfg.nodes), ii_st, ii_sp, n_parts])
+    # the paper's claim is over ITS benchmark set — all too large to fit
+    # the array spatially; jax_poly (14 nodes, fits, recurrence-free) is
+    # our addition and legitimately wins on a spatial fabric (reported,
+    # excluded from the claim)
+    claims = {
+        "spatial_ii_ge_spatiotemporal": all(
+            data[n]["spatial_ii"] >= data[n]["st_ii"]
+            for n in PAPER_KERNELS if data[n]["st_ii"] > 0),
+    }
+    payload = {"data": data, "claims": claims}
+    save("fig9_spatial_vs_st", payload)
+    if verbose:
+        print("== Fig. 9: spatial (Snafu-like) vs spatio-temporal (HyCUBE) ==")
+        print(fmt_table(["kernel", "nodes", "ST II", "spatial II",
+                         "subgraphs"], rows))
+        print("claims:", claims)
+    return payload
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

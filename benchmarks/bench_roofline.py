@@ -1,0 +1,65 @@
+"""Roofline summary over the multi-pod dry-run artifacts (ours, §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by `python -m repro.launch.dryrun`)
+and prints the per-cell roofline table: the three terms in seconds, the
+dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import fmt_table, save
+
+DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16", tag: str = "") -> dict:
+    cells = {}
+    for f in sorted(DRYRUN.glob(f"*__{mesh}{tag}.json")):
+        rec = json.loads(f.read_text())
+        if tag == "" and rec.get("overrides"):
+            continue
+        cells[rec["cell"]] = rec
+    return cells
+
+
+def run(mesh: str = "pod16x16", verbose: bool = True) -> dict:
+    cells = load_cells(mesh)
+    rows, data = [], {}
+    for cell, rec in cells.items():
+        if rec["status"] != "ok":
+            rows.append([cell.replace(f"__{mesh}", ""), rec["status"],
+                         "", "", "", "", ""])
+            continue
+        r = rec["roofline"]
+        data[cell] = r
+        rows.append([
+            cell.replace(f"__{mesh}", ""), r["bottleneck"],
+            f"{r['t_compute_s']:.2e}", f"{r['t_memory_s']:.2e}",
+            f"{r['t_collective_s']:.2e}",
+            f"{r.get('useful_flops_ratio', 0):.2f}",
+            f"{r.get('roofline_fraction', 0):.2f}",
+        ])
+    ok = [r for r in cells.values() if r["status"] == "ok"]
+    bn = {}
+    for r in ok:
+        b = r["roofline"]["bottleneck"]
+        bn[b] = bn.get(b, 0) + 1
+    payload = {"mesh": mesh, "n_ok": len(ok), "n_total": len(cells),
+               "bottleneck_histogram": bn}
+    save(f"roofline_{mesh}", payload)
+    if verbose:
+        print(f"== Roofline per cell ({mesh}; terms in seconds) ==")
+        print(fmt_table(["cell", "bound", "t_comp", "t_mem", "t_coll",
+                         "useful", "frac"], rows))
+        print("bottleneck histogram:", bn)
+    return payload
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

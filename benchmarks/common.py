@@ -1,0 +1,35 @@
+"""Shared helpers for the per-table benchmark harnesses."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+
+def save(name: str, payload: dict) -> None:
+    ART.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload)
+    payload["bench"] = name
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def fmt_table(headers: Sequence[str], rows: List[Sequence]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    def line(vals):
+        return "  ".join(str(v).rjust(w) for v, w in zip(vals, widths))
+    out = [line(headers), line(["-" * w for w in widths])]
+    out += [line(r) for r in rows]
+    return "\n".join(out)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,56 @@
+"""Benchmark harness entry: one bench per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Each bench prints its table, records artifacts/bench/<name>.json, and
+returns machine-checkable claim booleans; the run fails (exit 1) if any
+paper claim is violated.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_fig9_spatial_vs_st, bench_fig10_voltage,
+                        bench_fig11_breakdown, bench_roofline,
+                        bench_table2_validation, bench_table3_multihop,
+                        bench_table4_efficiency)
+
+BENCHES = {
+    "table2_validation": bench_table2_validation.run,
+    "table3_multihop": bench_table3_multihop.run,
+    "fig9_spatial_vs_st": bench_fig9_spatial_vs_st.run,
+    "table4_efficiency": bench_table4_efficiency.run,
+    "fig10_voltage": bench_fig10_voltage.run,
+    "fig11_breakdown": bench_fig11_breakdown.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    failed = []
+    for name in names:
+        t0 = time.time()
+        print(f"\n########## {name} ##########")
+        payload = BENCHES[name]()
+        claims = payload.get("claims", {})
+        bad = [k for k, v in claims.items() if not v]
+        if bad:
+            failed.append((name, bad))
+        print(f"[{name}] done in {time.time() - t0:.1f}s"
+              + (f"  VIOLATED: {bad}" if bad else "  all claims hold"))
+    print("\n================ SUMMARY ================")
+    if failed:
+        for name, bad in failed:
+            print(f"FAIL {name}: {bad}")
+        sys.exit(1)
+    print(f"all {len(names)} benches passed their paper-claim checks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""LISA-lite end-to-end: train a placement-bias model with the repo's own
+optimizer, plug it into the mapper's label_fn hook, evaluate on held-out
+kernels (paper §III-D: learned methods swap into the architecture-adaptive
+mapper without toolchain changes).
+
+    PYTHONPATH=src python examples/learned_mapper.py
+"""
+from repro.core.adl import hycube
+from repro.core.dfg import apply_layout, plan_layout
+from repro.core.kernel_lib import KERNELS
+from repro.core.lisa import collect_dataset, make_label_fn, train
+from repro.core.mapper import map_dfg
+
+TRAIN_SET = ("gemm", "fft", "dct")
+EVAL_SET = ("nw", "adpcm", "jax_poly")
+
+fab = hycube(4, 4)
+
+
+def laid_out(name):
+    dfg, _, n = KERNELS[name]()
+    return apply_layout(dfg, plan_layout(dfg)), n
+
+
+print("collecting training mappings...")
+train_kernels = [laid_out(n) for n in TRAIN_SET]
+feats, labels, pf = collect_dataset(train_kernels, fab)
+print(f"dataset: {len(labels)} (node -> PE) pairs from {TRAIN_SET}")
+
+params, losses = train(feats, labels, pf, steps=300)
+print(f"train loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+assert losses[-1] < losses[0], "training must reduce loss"
+
+label_mem = make_label_fn(params, fab, mem_only=True)
+label_all = make_label_fn(params, fab, mem_only=False)
+print(f"\n{'kernel':10s} {'II':>4s} {'II mem-bias':>12s} {'II all-bias':>12s}"
+      f" {'restarts':>9s} {'r mem-bias':>11s}")
+for name in EVAL_SET:
+    dfg, _ = laid_out(name)
+    base = map_dfg(dfg, fab, seed=3)
+    mem = map_dfg(dfg, fab, seed=3, label_fn=label_mem(dfg))
+    allb = map_dfg(dfg, fab, seed=3, label_fn=label_all(dfg))
+    print(f"{name:10s} {base.II:4d} {mem.II:12d} {allb.II:12d} "
+          f"{base.restarts:9d} {mem.restarts:11d}")
+    assert mem.success and base.success
+    assert mem.II <= base.II, "mem-only learned bias must not wreck II"
+print("\nlearned-mapper hook OK: mem-node labels transfer (II parity); "
+      "absolute compute-node labels mislead on unseen kernels — the\n"
+      "measured reason LISA uses relative GNN labels (see core/lisa.py).")

@@ -1,0 +1,36 @@
+"""Pipeline parallelism from the paper's modulo-scheduling framework.
+
+A software-pipelined CGRA loop and a pipeline-parallel training step are
+the same reservation-table object (DESIGN.md §2): stages = FUs,
+microbatches = loop iterations, II = injection interval.  This example
+derives GPipe / 1F1B / interleaved-1F1B schedules for a 27B-scale config
+split over 8 stages, verifies every dependence edge, and compares bubble
+fractions against the closed-form (RecMII-style) bound.
+
+    PYTHONPATH=src python examples/pipeline_from_modulo.py
+"""
+from repro.core.pipeline_schedule import (bubble_model, gpipe,
+                                          interleaved_1f1b, one_f_one_b)
+
+S = 8            # pipeline stages (e.g. gemma3-27b's 62 layers over 8 devices)
+M = 32           # microbatches per step
+
+print(f"pipeline: {S} stages x {M} microbatches "
+      f"(analytic bubble bound {bubble_model(S, M):.3f})\n")
+rows = []
+for sched in (gpipe(S, M), one_f_one_b(S, M),
+              interleaved_1f1b(S, M, n_chunks=2),
+              interleaved_1f1b(S, M, n_chunks=4)):
+    sched.verify()                      # replay + check every dependence
+    rows.append((sched.name, sched.total_ticks, sched.bubble_fraction(),
+                 sched.peak_in_flight()))
+    print(f"{sched.name:22s} ticks={sched.total_ticks:4d} "
+          f"bubble={sched.bubble_fraction():.3f} "
+          f"peak-activations={sched.peak_in_flight()}")
+
+gp, fb = rows[0], rows[1]
+il2, il4 = rows[2], rows[3]
+assert fb[3] <= gp[3], "1F1B must cap activation memory vs GPipe"
+assert il4[2] <= il2[2] <= gp[2] + 1e-9, \
+    "interleaving must shrink the bubble"
+print("\nall schedules verified; 1F1B caps memory, interleaving cuts bubble")

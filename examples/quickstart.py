@@ -1,0 +1,67 @@
+"""Quickstart: the paper's toolchain end-to-end in ~60 lines.
+
+Describe a CGRA in the ADL, write a kernel against the DFG builder DSL,
+map it with the modulo-scheduling mapper, execute the resulting bitstream
+on (a) the cycle-accurate simulator and (b) the Pallas TPU kernel, and
+validate both against the DFG interpreter oracle — the Morpher flow of
+paper Fig. 2.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.adl import hycube, n2n
+from repro.core.dfg import (DFGBuilder, apply_layout, flat_memory, interpret,
+                            plan_layout, unflatten_memory)
+from repro.core.mapper import map_dfg
+from repro.core.simulator import simulate
+from repro.kernels.cgra_exec.ops import cgra_exec_op
+
+# -- 1. a loop kernel in the builder DSL (annotated-C analogue) --------------
+#    out[i] = clamp(a[i] * b[i] >> 4, -128, 127) + running_sum
+b = DFGBuilder("quickstart")
+N = 16
+b.array("a", N)
+b.array("b", N)
+b.array("out", N, output=True)
+i = b.counter()                      # loop induction variable
+acc = b.recur(init=0)                # loop-carried running sum
+prod = b.op("SHR", b.op("MUL", b.load("a", i), b.load("b", i)), 4)
+clamped = b.op("MAX", b.op("MIN", prod, 127), -128)
+total = b.op("ADD", acc, clamped)
+b.bind(acc, total)                   # close the recurrence
+b.store("out", i, total)
+dfg = b.build()
+print(f"DFG: {len(dfg.nodes)} nodes, {dfg.n_mem_ops} memory ops, "
+      f"{len(dfg.recurrence_cycles())} recurrence cycle(s)")
+
+# -- 2. plan the scratchpad layout and map onto two fabrics -------------------
+layout = plan_layout(dfg)
+laid = apply_layout(dfg, layout)
+for fabric in (hycube(4, 4, max_hops=4), n2n(4, 4)):
+    res = map_dfg(laid, fabric)
+    print(f"{fabric.name}: II={res.II} (MII={res.mii}) "
+          f"util={res.fu_util:.2f} mapped in {res.wall_s:.2f}s")
+
+# -- 3. execute + validate (simulator AND Pallas kernel vs oracle) ------------
+fabric = hycube(4, 4)
+res = map_dfg(laid, fabric)
+rng = np.random.default_rng(0)
+mem = {"a": rng.integers(-100, 100, N).astype(np.int32),
+       "b": rng.integers(-100, 100, N).astype(np.int32)}
+expect = interpret(dfg, mem, N)                     # oracle
+
+flat = flat_memory(layout, mem)
+sim_out, stats = simulate(res.config, flat, N)
+got_sim = unflatten_memory(layout, sim_out, dfg.arrays)
+
+pallas_out = cgra_exec_op(res.config, flat[None], N)[0]
+got_pl = unflatten_memory(layout, pallas_out, dfg.arrays)
+
+ok_sim = bool((got_sim["out"] == expect["out"]).all())
+ok_pl = bool((got_pl["out"] == expect["out"]).all())
+print(f"cycle-accurate simulator matches oracle: {ok_sim} "
+      f"(PE activity {stats.pe_activity:.2f})")
+print(f"Pallas cgra_exec kernel matches oracle:  {ok_pl}")
+assert ok_sim and ok_pl
+print("quickstart OK")

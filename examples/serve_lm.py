@@ -1,0 +1,16 @@
+"""Serving example: batched greedy decoding across model families.
+
+Runs the continuous-batching serve driver for a dense, an MoE, and a
+recurrent (RWKV6) architecture — the same `decode_step` path the
+decode_32k/long_500k dry-run cells lower at production scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+for arch in ("qwen3-8b", "deepseek-moe-16b", "rwkv6-1.6b"):
+    print(f"\n--- serving {arch} (smoke config) ---")
+    out = serve_main(["--arch", arch, "--smoke",
+                      "--requests", "4", "--max-new", "8"])
+    assert out["tokens"].shape == (4, 8)
+print("\nserve example OK")

@@ -1,0 +1,43 @@
+"""End-to-end training example: ~100M-param dense LM, few hundred steps.
+
+Uses the same driver a production run would (`repro.launch.train`), with a
+--scale override that instantiates a ~100M-param Qwen3-family config on
+this host's mesh, checkpointing + fault-tolerant supervisor enabled.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import json
+import tempfile
+
+from repro.launch.train import main as train_main
+
+SCALE_100M = {
+    "n_layers": 12, "d_model": 768, "n_heads": 12, "n_kv_heads": 4,
+    "d_ff": 3072, "vocab": 16384, "head_dim": 64,
+}
+# ~104M backbone + 12.6M tied embedding ≈ 1.1e8 params.  A few hundred
+# steps takes tens of minutes on the CPU container; pass --steps/--batch
+# to shrink.  (CI smoke uses the driver directly with --smoke instead.)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+    ckpt = tempfile.mkdtemp(prefix="repro_train_")
+    out = train_main([
+        "--arch", "qwen3-8b",
+        "--scale", json.dumps(SCALE_100M),
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--ckpt-dir", ckpt,
+        "--ckpt-every", "50",
+        "--log-every", "10",
+    ])
+    assert out["last_loss"] < out["first_loss"], \
+        f"loss did not improve: {out['first_loss']} -> {out['last_loss']}"
+    print(f"loss improved {out['first_loss']:.3f} -> {out['last_loss']:.3f}; "
+          f"checkpoints in {ckpt}")

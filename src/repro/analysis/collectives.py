@@ -1,0 +1,73 @@
+"""Per-op collective profile of a dry-run cell (the §Perf 'profiler').
+
+    PYTHONPATH=src python -m repro.analysis.collectives \
+        --arch gemma3-27b --shape train_4k [--multi-pod] [--top 15]
+
+Re-lowers the cell on the production mesh and prints the top collectives
+by wire bytes with their result shapes, group sizes and trip counts —
+the dry-run equivalent of reading a comm profile.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+import argparse     # noqa: E402
+import json         # noqa: E402
+
+from repro.analysis.hlo_cost import HloCostModel      # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--overrides", default=None)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    overrides = json.loads(args.overrides) if args.overrides else None
+    cfg, shape, lowered, compiled = lower_cell(
+        args.arch, args.shape, mesh,
+        "pod2x16x16" if args.multi_pod else "pod16x16", overrides)
+    model = HloCostModel(compiled.as_text())
+    acc = model.top_collectives()
+    rows = sorted(acc.items(), key=lambda kv: -kv[1]["wire_bytes"])
+    total = sum(v["wire_bytes"] for v in acc.values())
+    print(f"\n{args.arch} {args.shape}: total wire {total / 1e9:.1f} GB/dev")
+    print(f"{'kind':18s} {'g':>4s} {'count':>7s} {'wire GB':>9s}  shape")
+    for (kind, shp, g), v in rows[:args.top]:
+        print(f"{kind:18s} {g:4d} {v['count']:7.0f} "
+              f"{v['wire_bytes'] / 1e9:9.2f}  {shp}")
+
+
+if __name__ == "__main__":
+    main()
+
+
+def memory_main():  # pragma: no cover — CLI variant used by §Perf loop
+    import sys
+    sys.argv[0] = "collectives"
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--overrides", default=None)
+    args = ap.parse_args()
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh()
+    overrides = json.loads(args.overrides) if args.overrides else None
+    cfg, shape, lowered, compiled = lower_cell(args.arch, args.shape, mesh,
+                                               "pod16x16", overrides)
+    model = HloCostModel(compiled.as_text())
+    acc = model.top_memory()
+    rows = sorted(acc.items(), key=lambda kv: -kv[1]["bytes"])
+    total = sum(v["bytes"] for v in acc.values())
+    print(f"\n{args.arch} {args.shape}: total HBM traffic "
+          f"{total / 1e12:.2f} TB/dev")
+    print(f"{'opcode':22s} {'count':>8s} {'GB':>9s}  shape")
+    for (kind, shp), v in rows[:args.top]:
+        print(f"{kind:22s} {v['count']:8.0f} {v['bytes'] / 1e9:9.1f}  {shp}")

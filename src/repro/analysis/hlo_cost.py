@@ -1,0 +1,500 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless
+of trip count, which under-reports scanned-layer models by ~n_layers x.
+This parser rebuilds the cost bottom-up through the call graph:
+
+  * dot ops        -> FLOPs = 2 * |output| * prod(contracting dims)
+  * fusion ops     -> bytes = operands + outputs (fusion internals are free);
+                      FLOPs = cost of the fused computation
+  * while ops      -> body+cond cost x known_trip_count (annotated by XLA in
+                      backend_config)
+  * collectives    -> per-device wire bytes with ring-model factors and the
+                      replica-group size parsed from the op
+
+Because the compiled module is the per-device SPMD program, every quantity
+here is PER DEVICE: roofline terms divide by single-chip peaks directly.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%?[\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_comps(line: str) -> List[str]:
+    names = _CALL_ATTR_RE.findall(line)
+    for grp in _BRANCHES_RE.findall(line):
+        names.extend(n.strip() for n in grp.split(",") if n.strip())
+    return names
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "opt-barrier"}
+
+
+def _arrays(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _ARRAY_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _arrays(type_str):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems_of(type_str: str) -> int:
+    total = 0
+    for _, dims in _arrays(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.transcendentals += mult * other.transcendentals
+        for k, v in other.coll.items():
+            d = self.coll.setdefault(k, {"count": 0.0, "operand_bytes": 0.0,
+                                         "wire_bytes": 0.0})
+            for kk in d:
+                d[kk] += mult * v.get(kk, 0.0)
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+(%?[\w\.\-]+)", text, re.M)
+        return m.group(1) if m else next(iter(self.comps))
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            cm = _COMP_RE.match(line)
+            if cm and "{" in line:
+                cur = cm.group(1)
+                self.comps[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            om = _OP_RE.match(line)
+            if om:
+                self.comps[cur].append(
+                    _Op(om.group(2), om.group(3), om.group(4), line))
+
+    # -- per-op costing -------------------------------------------------------
+    @staticmethod
+    def _call_pos(op: _Op) -> int:
+        """Position of the real call-site ``opcode(`` (NOT the op's own name,
+        which usually contains the opcode, e.g. ``%all-to-all.55``)."""
+        m = re.search(r"(?<![\w.%\-])" + re.escape(op.opcode) + r"\(",
+                      op.line)
+        return m.start() if m else op.line.index(op.opcode)
+
+    def _dot_flops(self, op: _Op, symtab: Dict[str, str]) -> float:
+        out_elems = _elems_of(op.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+        cdims = [int(d) for d in m.group(1).split(",") if d] if m else []
+        args = self._op_args(op)
+        contract = 1
+        if args and cdims:
+            ltype = symtab.get(args[0].lstrip("%"), args[0])
+            arrs = _arrays(ltype)
+            if arrs:
+                dims = arrs[0][1]
+                for c in cdims:
+                    if c < len(dims):
+                        contract *= dims[c]
+        return 2.0 * out_elems * max(contract, 1)
+
+    def _operand_bytes(self, op: _Op, symtab: Dict[str, str]) -> float:
+        total = 0.0
+        for a in self._op_args(op):
+            nm = a.lstrip("%")
+            if nm in symtab:
+                total += _bytes_of(symtab[nm])
+            else:
+                total += _bytes_of(a)
+        return total
+
+    def _emulated_bf16(self, prod: _Op, symtab: Dict[str, str]) -> bool:
+        """True when ``prod`` yields an f32 buffer that is semantically bf16.
+
+        The CPU host backend (the dry-run target) emulates bf16 arithmetic
+        in f32 with explicit f32->bf16->f32 rounding round-trips, so SPMD
+        collectives over bf16 tensors appear at f32 width.  A real TPU
+        reduces bf16 natively; wire bytes must be counted at bf16 width.
+        """
+        if "f32[" not in prod.type_str:
+            return False
+        if prod.opcode == "convert":
+            args = self._op_args(prod)
+            t = symtab.get(args[0].lstrip("%"), "") if args else ""
+            return "bf16[" in t
+        if prod.opcode == "fusion":
+            for n in _called_comps(prod.line):
+                key = n.lstrip("%")
+                ops = self.comps.get(n) or self.comps.get(key) \
+                    or self.comps.get("%" + key) or []
+                for o in ops:
+                    if o.opcode == "convert" and "bf16[" in o.type_str:
+                        return True
+        return False
+
+    def _collective_operand_bytes(self, op: _Op, symtab: Dict[str, str],
+                                  by_name: Dict[str, "_Op"]) -> float:
+        total = 0.0
+        for a in self._op_args(op):
+            nm = a.lstrip("%")
+            b = _bytes_of(symtab.get(nm, a))
+            prod = by_name.get(nm)
+            if prod is not None and self._emulated_bf16(prod, symtab):
+                b *= 0.5
+            total += b
+        return total
+
+    def _op_args(self, op: _Op) -> List[str]:
+        seg = op.line[self._call_pos(op) + len(op.opcode):]
+        depth = 0
+        buf = ""
+        for ch in seg:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                buf += ch
+        return [a.strip() for a in buf.split(",") if a.strip()]
+
+    def _dus_update_bytes(self, op: _Op, symtab: Dict[str, str]) -> float:
+        args = self._op_args(op)
+        if len(args) >= 2:
+            nm = args[1].lstrip("%")
+            return _bytes_of(symtab.get(nm, args[1]))
+        return _bytes_of(op.type_str)
+
+    def _fusion_bytes(self, op: _Op, symtab: Dict[str, str],
+                      called: List[str]) -> float:
+        """Operand+output bytes with slice-aware parameter accounting."""
+        # map fused-computation params -> how they are consumed
+        slice_params: Dict[int, float] = {}
+        dus_root = None
+        for n in called:
+            ops = self.comps.get(n) or self.comps.get("%" + n.lstrip("%")) \
+                or self.comps.get(n.lstrip("%")) or []
+            psym = {o.name.lstrip("%"): o.type_str for o in ops}
+            pidx = {}
+            consumers: Dict[str, List[_Op]] = {}
+            for o in ops:
+                if o.opcode == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", o.line)
+                    if m:
+                        pidx[o.name.lstrip("%")] = int(m.group(1))
+                for a in self._op_args(o):
+                    consumers.setdefault(a.lstrip("%"), []).append(o)
+            for pname, idx in pidx.items():
+                cons = consumers.get(pname, [])
+                if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                    slice_params[idx] = sum(
+                        _bytes_of(c.type_str) for c in cons)
+                if cons and all(c.opcode == "dynamic-update-slice"
+                                and self._op_args(c)
+                                and self._op_args(c)[0].lstrip("%") == pname
+                                for c in cons):
+                    # in-place updated buffer: traffic = update bytes
+                    slice_params[idx] = sum(
+                        self._dus_update_bytes(c, psym) for c in cons)
+            for o in ops:
+                if o.line.lstrip().startswith("ROOT") \
+                        and o.opcode == "dynamic-update-slice":
+                    dus_root = self._dus_update_bytes(o, psym)
+        args = self._op_args(op)
+        total = 0.0
+        for i, a in enumerate(args):
+            if i in slice_params:
+                total += slice_params[i]
+            else:
+                nm = a.lstrip("%")
+                total += _bytes_of(symtab.get(nm, a))
+        if dus_root is not None:
+            total += dus_root
+        else:
+            total += _bytes_of(op.type_str)
+        return total
+
+    @staticmethod
+    def _group_size(line: str, default: int = 2) -> int:
+        m = _GROUPS_IOTA_RE.search(line)
+        if m:
+            return max(1, int(m.group(2)))
+        m = _GROUPS_LIST_RE.search(line)
+        if m:
+            return max(1, len(m.group(1).split(",")))
+        return default
+
+    def cost(self, comp: Optional[str] = None) -> Cost:
+        comp = comp or self.entry
+        key = comp.lstrip("%")
+        for k in (comp, key, "%" + key):
+            if k in self._memo:
+                return self._memo[k]
+        ops = self.comps.get(comp) or self.comps.get("%" + key) \
+            or self.comps.get(key) or []
+        symtab = {o.name.lstrip("%"): o.type_str for o in ops}
+        by_name = {o.name.lstrip("%"): o for o in ops}
+        total = Cost()
+        for op in ops:
+            oc = op.opcode
+            if oc in _SKIP_OPS:
+                continue
+            if oc == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                body = Cost()
+                for n in _called_comps(op.line):
+                    body.add(self.cost(n))
+                total.add(body, mult=trip)
+                continue
+            if oc in ("fusion", "call", "conditional", "map"):
+                names = _called_comps(op.line)
+                inner = Cost()
+                for n in names:
+                    inner.add(self.cost(n))
+                total.flops += inner.flops
+                total.transcendentals += inner.transcendentals
+                # fusion memory = operands + outputs, but slice-aware:
+                # a fused dynamic-slice only touches the slice, and a
+                # DUS root writes the update region in place (XLA aliases
+                # scan carries) — crucial for scanned stacked weights.
+                total.bytes += self._fusion_bytes(op, symtab, names)
+                total.coll = _merge_coll(total.coll, inner.coll)
+                continue
+            if oc in ("dynamic-slice", "dynamic-update-slice"):
+                if oc == "dynamic-slice":
+                    total.bytes += 2.0 * _bytes_of(op.type_str)
+                else:
+                    upd = self._dus_update_bytes(op, symtab)
+                    total.bytes += 2.0 * upd
+                total.flops += _elems_of(op.type_str) * 0  # pure data movement
+                continue
+            if any(oc.startswith(c) for c in COLLECTIVES):
+                if oc.endswith("-done"):
+                    continue
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                g = self._group_size(op.line)
+                ob = self._collective_operand_bytes(op, symtab, by_name)
+                out_b = _bytes_of(op.type_str)
+                if kind == "all-gather":
+                    wire = ob * (g - 1)
+                elif kind == "reduce-scatter":
+                    wire = out_b * (g - 1)
+                elif kind == "all-reduce":
+                    wire = 2.0 * ob * (g - 1) / g
+                elif kind == "all-to-all":
+                    wire = ob * (g - 1) / g
+                else:  # collective-permute
+                    wire = ob
+                d = total.coll.setdefault(
+                    kind, {"count": 0.0, "operand_bytes": 0.0,
+                           "wire_bytes": 0.0})
+                d["count"] += 1
+                d["operand_bytes"] += ob
+                d["wire_bytes"] += wire
+                total.bytes += ob + out_b
+                continue
+            if oc == "dot":
+                total.flops += self._dot_flops(op, symtab)
+                total.bytes += self._operand_bytes(op, symtab) \
+                    + _bytes_of(op.type_str)
+                continue
+            if oc in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                      "sine", "cosine", "logistic"):
+                total.transcendentals += _elems_of(op.type_str)
+            # generic op: elementwise flops + memory traffic
+            total.flops += _elems_of(op.type_str)
+            total.bytes += self._operand_bytes(op, symtab) \
+                + _bytes_of(op.type_str)
+        self._memo[comp] = total
+        return total
+
+
+    # -- per-op memory attribution (perf-loop profiling aid) ----------------
+    def top_memory(self, comp: Optional[str] = None, mult: float = 1.0,
+                   acc: Optional[Dict] = None) -> Dict:
+        """Aggregate HBM traffic by (opcode, result type) with trip counts."""
+        acc = {} if acc is None else acc
+        comp = comp or self.entry
+        key = comp.lstrip("%")
+        ops = self.comps.get(comp) or self.comps.get("%" + key) \
+            or self.comps.get(key) or []
+        symtab = {o.name.lstrip("%"): o.type_str for o in ops}
+
+        def put(kind, shape, b):
+            d = acc.setdefault((kind, shape[:70]), {"count": 0.0,
+                                                    "bytes": 0.0})
+            d["count"] += mult
+            d["bytes"] += mult * b
+
+        for op in ops:
+            oc = op.opcode
+            if oc in _SKIP_OPS:
+                continue
+            if oc == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                for n in _called_comps(op.line):
+                    self.top_memory(n, mult * trip, acc)
+                continue
+            if oc in ("fusion", "call", "conditional", "map"):
+                b = self._fusion_bytes(op, symtab, _called_comps(op.line))
+                put(oc, op.type_str.strip(), b)
+                continue
+            if oc in ("dynamic-slice", "dynamic-update-slice"):
+                if oc == "dynamic-slice":
+                    put(oc, op.type_str.strip(), 2.0 * _bytes_of(op.type_str))
+                else:
+                    put(oc, op.type_str.strip(),
+                        2.0 * self._dus_update_bytes(op, symtab))
+                continue
+            if any(oc.startswith(c) for c in COLLECTIVES):
+                if not oc.endswith("-done"):
+                    put(oc, op.type_str.strip(),
+                        self._operand_bytes(op, symtab)
+                        + _bytes_of(op.type_str))
+                continue
+            put(oc, op.type_str.strip(),
+                self._operand_bytes(op, symtab) + _bytes_of(op.type_str))
+        return acc
+
+    # -- per-op collective attribution (perf-loop profiling aid) -----------
+    def top_collectives(self, comp: Optional[str] = None, mult: float = 1.0,
+                        acc: Optional[Dict] = None) -> Dict:
+        """Aggregate collectives by (kind, result type) with trip-count
+        multipliers — the dry-run 'profile' the §Perf loop iterates on."""
+        acc = {} if acc is None else acc
+        comp = comp or self.entry
+        key = comp.lstrip("%")
+        ops = self.comps.get(comp) or self.comps.get("%" + key) \
+            or self.comps.get(key) or []
+        symtab = {o.name.lstrip("%"): o.type_str for o in ops}
+        by_name = {o.name.lstrip("%"): o for o in ops}
+        for op in ops:
+            oc = op.opcode
+            if oc == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                for n in _called_comps(op.line):
+                    self.top_collectives(n, mult * trip, acc)
+                continue
+            if oc in ("fusion", "call", "conditional", "map"):
+                for n in _called_comps(op.line):
+                    self.top_collectives(n, mult, acc)
+                continue
+            if any(oc.startswith(c) for c in COLLECTIVES) \
+                    and not oc.endswith("-done"):
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                g = self._group_size(op.line)
+                ob = self._collective_operand_bytes(op, symtab, by_name)
+                out_b = _bytes_of(op.type_str)
+                if kind == "all-gather":
+                    wire = ob * (g - 1)
+                elif kind == "reduce-scatter":
+                    wire = out_b * (g - 1)
+                elif kind == "all-reduce":
+                    wire = 2.0 * ob * (g - 1) / g
+                elif kind == "all-to-all":
+                    wire = ob * (g - 1) / g
+                else:
+                    wire = ob
+                shape = op.type_str.strip()[:70]
+                k = (kind, shape, g)
+                d = acc.setdefault(k, {"count": 0.0, "wire_bytes": 0.0})
+                d["count"] += mult
+                d["wire_bytes"] += mult * wire
+        return acc
+
+
+def _merge_coll(a, b):
+    out = dict(a)
+    for k, v in b.items():
+        d = out.setdefault(k, {"count": 0.0, "operand_bytes": 0.0,
+                               "wire_bytes": 0.0})
+        for kk in d:
+            d[kk] += v.get(kk, 0.0)
+    return out
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, object]:
+    model = HloCostModel(hlo_text)
+    c = model.cost()
+    wire = sum(v["wire_bytes"] for v in c.coll.values())
+    operand = sum(v["operand_bytes"] for v in c.coll.values())
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "transcendentals_per_device": c.transcendentals,
+        "collective_wire_bytes_per_device": wire,
+        "collective_operand_bytes_per_device": operand,
+        "collectives": c.coll,
+    }

@@ -1,0 +1,13 @@
+"""Per-op HBM-traffic profile of a dry-run cell (§Perf memory profiler).
+
+    PYTHONPATH=src python -m repro.analysis.memprof --arch gemma3-27b \
+        --shape train_4k [--overrides '{"shard_strategy":"fsdp"}']
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+from repro.analysis.collectives import memory_main   # noqa: E402
+
+if __name__ == "__main__":
+    memory_main()

@@ -1,0 +1,186 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh) cell:
+
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = coll_bytes  / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are not in cost_analysis, so we parse the post-partitioning HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# -- TPU v5e hardware constants ------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+LINK_BW = 50e9                    # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum operand bytes per collective kind from (post-SPMD) HLO text."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:%[\w.\-]+ = )?\(?([a-z0-9\[\],\s{}():/#\w.\-]*?)"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done(" in ls:
+            continue                       # avoid double counting start/done
+        # operand types appear inside the call parens
+        inside = ls[ls.index("(") + 1:]
+        b = _shape_bytes(inside)
+        if b == 0:
+            # fallback: result type on the lhs
+            b = _shape_bytes(ls.split("=")[0] if "=" in ls else ls)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    return out
+
+
+@dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    per_device_hbm_peak: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute vs the machine at the step-time lower bound."""
+        if self.step_time_lb == 0:
+            return 0.0
+        return (self.model_flops / self.step_time_lb) \
+            / (self.chips * PEAK_FLOPS_BF16)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_hbm_peak": self.per_device_hbm_peak,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(cfg, shape_kind: str, seq: int, batch: int,
+                decode: bool = False) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference forward)."""
+    n_active = cfg.active_param_count()
+    tokens = batch * (1 if decode else seq)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: Dict[str, float], hlo_text: str, mflops: float,
+            mem_peak: float = 0.0) -> RooflineResult:
+    colls = parse_collectives(hlo_text)
+    cbytes = sum(v["bytes"] for v in colls.values())
+    return RooflineResult(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=cbytes, model_flops=mflops,
+        per_device_hbm_peak=mem_peak, collectives=colls,
+    )
+
+
+def analyze_per_device(arch: str, shape: str, mesh_name: str, chips: int,
+                       hlo_cost: Dict[str, object], mflops: float,
+                       mem_peak: float = 0.0) -> "RooflineResult":
+    """Roofline from the trip-count-aware per-device HLO cost model.
+
+    The compiled module is the per-device SPMD program, so all quantities
+    are already per chip: ``hlo_flops`` etc. store per-device values and
+    the roofline terms divide by single-chip peaks (chips kept for the
+    useful-compute ratio).
+    """
+    res = RooflineResult(
+        arch=arch, shape=shape, mesh=mesh_name, chips=1,
+        hlo_flops=float(hlo_cost["flops_per_device"]),
+        hlo_bytes=float(hlo_cost["bytes_per_device"]),
+        collective_bytes=float(hlo_cost["collective_wire_bytes_per_device"]),
+        model_flops=mflops / chips,        # useful flops per chip
+        per_device_hbm_peak=mem_peak,
+        collectives=dict(hlo_cost["collectives"]),
+    )
+    return res

@@ -1,0 +1,160 @@
+"""Sharded checkpointing: npz payloads + JSON manifest, async save,
+elastic restore (re-shard onto a different mesh).
+
+Layout:  <dir>/step_<n>/manifest.json + arrays.npz
+The manifest records step, data-pipeline cursor, mesh shape and per-leaf
+paths/shapes/dtypes, so a restart can validate compatibility and an
+elastic resize can re-shard (arrays are saved unsharded here; on a real
+multi-host fleet each host would save its shard and restore does a
+re-shard-on-load — the interface is the same).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz cannot round-trip ml_dtypes custom dtypes; store them bit-exactly as
+# a same-width integer view and record the true dtype in the manifest.
+_VIEW_ENCODE = {
+    np.dtype(ml_dtypes.bfloat16): ("bfloat16", np.uint16),
+    np.dtype(ml_dtypes.float8_e4m3fn): ("float8_e4m3fn", np.uint8),
+    np.dtype(ml_dtypes.float8_e5m2): ("float8_e5m2", np.uint8),
+}
+_VIEW_DECODE = {name: dt for dt, (name, _) in _VIEW_ENCODE.items()}
+
+
+def _encode(arr: np.ndarray):
+    enc = _VIEW_ENCODE.get(arr.dtype)
+    if enc is None:
+        return arr, str(arr.dtype)
+    name, view = enc
+    return arr.view(view), name
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_DECODE:
+        return arr.view(_VIEW_DECODE[dtype_name])
+    return arr
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    out = Path(ckpt_dir) / f"step_{step:08d}"
+    tmp = Path(ckpt_dir) / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+    enc = {k: _encode(v) for k, v in flat.items()}
+    np.savez(tmp / "arrays.npz", **{k: a for k, (a, _) in enc.items()})
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "leaves": {k: {"shape": list(v.shape), "dtype": enc[k][1]}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if out.exists():
+        shutil.rmtree(out)
+    os.rename(tmp, out)                      # atomic publish
+    _gc(ckpt_dir, keep)
+    return str(out)
+
+
+def save_async(ckpt_dir: str, step: int, tree, *, extra=None,
+               keep: int = 3) -> threading.Thread:
+    """Snapshot to host memory synchronously, write in a background thread."""
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+
+    def _write():
+        out = Path(ckpt_dir) / f"step_{step:08d}"
+        tmp = Path(ckpt_dir) / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        enc = {k: _encode(v) for k, v in flat.items()}
+        np.savez(tmp / "arrays.npz", **{k: a for k, (a, _) in enc.items()})
+        manifest = {
+            "step": step, "time": time.time(),
+            "leaves": {k: {"shape": list(v.shape), "dtype": enc[k][1]}
+                       for k, v in flat.items()},
+            "extra": extra or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if out.exists():
+            shutil.rmtree(out)
+        os.rename(tmp, out)
+        _gc(ckpt_dir, keep)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(Path(ckpt_dir).glob("step_*"))
+    for old in steps[:-keep]:
+        shutil.rmtree(old)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = sorted(Path(ckpt_dir).glob("step_*"))
+    return int(steps[-1].name.split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: str, target_tree, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings`` (optional pytree of NamedSharding) re-shards on load —
+    this is the elastic-resize path: the same checkpoint restores onto a
+    smaller or larger mesh.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    src = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    data = np.load(src / "arrays.npz")
+    flat_target = _flatten(target_tree)
+    restored = {}
+    for key, ref in flat_target.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = _decode(data[key],
+                      manifest["leaves"].get(key, {}).get("dtype", ""))
+        if list(arr.shape) != list(np.shape(ref)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(ref)}")
+        restored[key] = arr
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+
+    def rebuild(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = restored[key].astype(leaf.dtype)
+        if key in flat_sh:
+            return jax.device_put(arr, flat_sh[key])
+        return jax.numpy.asarray(arr)
+
+    tree = jax.tree_util.tree_map_with_path(rebuild, target_tree)
+    return tree, manifest

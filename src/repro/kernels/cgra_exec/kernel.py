@@ -1,0 +1,194 @@
+"""Pallas TPU kernel: execute a linked CGRA configuration over a batch.
+
+TPU adaptation of the paper's execution substrate (DESIGN.md §2).  The
+fabric's PE array is small (16–64 PEs) and its cycle loop is sequential,
+so a 1:1 port would waste the TPU.  Instead:
+
+  * the BATCH of independent executions (test vectors / workload
+    instances) is vectorized across VPU lanes — each lane is one CGRA
+    instance, the per-cycle PE update is a (P, lanes) elementwise block;
+  * the configuration memory (the paper's CM, 52% of CGRA power because
+    it is read every cycle) is the linked table image, resident in VMEM
+    for the whole kernel — the "CM stays on-chip" analogue;
+  * HyCUBE's single-cycle multi-hop routes were resolved at link time
+    (kernels/cgra_exec/linking.py), so operand fetch is a static one-hot
+    gather over the PE state — compiler-scheduled routing with zero
+    dynamic-routing hardware, exactly the paper's bet;
+  * the scratchpad lives in VMEM as an (M, lanes) block; LOAD/STORE are
+    data-dependent per lane and become one-hot compare/select reductions
+    (TPU has no per-lane gather; this is the idiomatic replacement).
+
+Grid: (batch_tiles,) — each grid step simulates ``total_cycles`` of the
+whole fabric for one batch tile via ``fori_loop`` carrying (O, R, mem).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.machine import OPC
+from repro.kernels.cgra_exec.linking import (K_CONST, K_NONE, K_O, K_R,
+                                             K_RESULT, LinkedConfig)
+
+I32 = jnp.int32
+
+
+def _sel_rows(idx, table):
+    """table[idx] for idx (P,) int32 over table (N, B) — one-hot gather.
+
+    TPU-friendly: avoids dynamic per-row gathers; (P, N) one-hot times
+    (N, B) state collapses to compare/multiply/sum on the VPU.
+    """
+    N = table.shape[0]
+    oh = (idx[:, None] == jax.lax.broadcasted_iota(I32, (1, N), 1)).astype(I32)
+    return jnp.sum(oh[:, :, None] * table[None, :, :], axis=1)
+
+
+def _alu(opc, v0, v1, v2, const, use_const_mask):
+    """Vectorized ALU: all opcodes computed, selected by ``opc`` (P, 1)."""
+    sh5 = jnp.bitwise_and(v1, 31)
+    cmp = lambda c: c.astype(I32)
+    cases = {
+        "ADD": v0 + v1, "SUB": v0 - v1, "MUL": v0 * v1,
+        "SHL": jax.lax.shift_left(v0, sh5),
+        "SHR": jax.lax.shift_right_arithmetic(v0, sh5),
+        "AND": v0 & v1, "OR": v0 | v1, "XOR": v0 ^ v1,
+        "MIN": jnp.minimum(v0, v1), "MAX": jnp.maximum(v0, v1),
+        "ABS": jnp.abs(v0),
+        "CMPLT": cmp(v0 < v1), "CMPGT": cmp(v0 > v1),
+        "CMPEQ": cmp(v0 == v1), "CMPNE": cmp(v0 != v1),
+        "CMPLE": cmp(v0 <= v1), "CMPGE": cmp(v0 >= v1),
+        "SELECT": jnp.where(v0 != 0, v1, v2),
+        "MOVC": jnp.broadcast_to(const, v0.shape),
+        "ROUTE": v0,
+    }
+    out = jnp.zeros_like(v0)
+    for name, val in cases.items():
+        out = jnp.where(opc == OPC[name], val, out)
+    return out
+
+
+def _cgra_kernel(scalar_ref, ops_ref, regw_ref, mem_in_ref, mem_out_ref, *,
+                 II: int, n_pes: int, n_regs: int, mem_pes, n_iters: int,
+                 total_cycles: int):
+    P, R = n_pes, n_regs
+    scalar = scalar_ref[...]            # (S, P, 4)
+    optab = ops_ref[...]                # (S, P, 3, 5)
+    rwtab = regw_ref[...]               # (S, P, R, 3)
+    mem0 = mem_in_ref[...]              # (M, B)
+    M, B = mem0.shape
+
+    def cycle(t, carry):
+        O, Rf, mem = carry              # (P,B), (P*R,B), (M,B)
+        s = t % II
+        sc = jax.lax.dynamic_index_in_dim(scalar, s, 0, keepdims=False)
+        op = jax.lax.dynamic_index_in_dim(optab, s, 0, keepdims=False)
+        rw = jax.lax.dynamic_index_in_dim(rwtab, s, 0, keepdims=False)
+        opc, const, use_c, t0 = sc[:, 0], sc[:, 1], sc[:, 2], sc[:, 3]
+        it = jnp.where(t0 >= 0, (t - t0) // II, 0)            # (P,)
+        fired = (opc != OPC["NOP"]) & (t0 >= 0) & (t >= t0) & (it < n_iters)
+        cvec = jnp.broadcast_to(const[:, None], (P, B))
+
+        # ---- operand fetch: static gathers over previous-cycle state -----
+        def operand(k):
+            kind, pe, reg = op[:, k, 0], op[:, k, 1], op[:, k, 2]
+            dist, init = op[:, k, 3], op[:, k, 4]
+            v = jnp.where((kind == K_O)[:, None], _sel_rows(pe, O), 0)
+            v = jnp.where((kind == K_R)[:, None],
+                          _sel_rows(pe * R + reg, Rf), v)
+            v = jnp.where((kind == K_CONST)[:, None], cvec, v)
+            use_init = (dist > 0) & (it < dist)
+            v = jnp.where(use_init[:, None],
+                          jnp.broadcast_to(init[:, None], (P, B)), v)
+            return kind, v
+
+        k0, v0 = operand(0)
+        k1, v1 = operand(1)
+        k2, v2 = operand(2)
+        # the immediate is a *trailing* ALU operand when use_const is set
+        n_ops = ((k0 != K_NONE).astype(I32) + (k1 != K_NONE).astype(I32)
+                 + (k2 != K_NONE).astype(I32))
+        uc = use_c != 0
+        v0 = jnp.where(((k0 == K_NONE) & uc & (n_ops == 0))[:, None], cvec, v0)
+        v1 = jnp.where(((k1 == K_NONE) & uc & (n_ops == 1))[:, None], cvec, v1)
+        v2 = jnp.where(((k2 == K_NONE) & uc & (n_ops == 2))[:, None], cvec, v2)
+
+        result = _alu(opc[:, None], v0, v1, v2, const[:, None], uc)
+
+        # ---- memory ops: sequential over LSU-capable PEs (port order) ----
+        iota_m = jax.lax.broadcasted_iota(I32, (M, 1), 0)
+        for mp in mem_pes:
+            is_ld = fired[mp] & (opc[mp] == OPC["LOAD"])
+            is_st = fired[mp] & (opc[mp] == OPC["STORE"])
+            has_idx = op[mp, 0, 0] != K_NONE
+            l_addr = jnp.where(has_idx, v0[mp], 0) + const[mp]        # (B,)
+            lval = jnp.sum(jnp.where(iota_m == l_addr[None, :], mem, 0),
+                           axis=0)
+            has2 = op[mp, 1, 0] != K_NONE
+            s_addr = jnp.where(has2, v0[mp] + const[mp], const[mp])
+            s_val = jnp.where(has2, v1[mp], v0[mp])
+            addr = jnp.where(is_st, s_addr, l_addr)
+            mem = jnp.where(is_st & (iota_m == addr[None, :]),
+                            s_val[None, :], mem)
+            row = jnp.where(is_ld, lval, jnp.where(is_st, s_val, result[mp]))
+            result = jnp.where(
+                (jax.lax.broadcasted_iota(I32, (P, 1), 0) == mp), row[None, :],
+                result)
+
+        # ---- end of cycle: register writes, then output latches -----------
+        rwk = rw[:, :, 0].reshape(P * R)
+        rwp = rw[:, :, 1].reshape(P * R)
+        rwr = rw[:, :, 2].reshape(P * R)
+        from_o = _sel_rows(rwp, O)
+        from_r = _sel_rows(rwp * R + rwr, Rf)
+        from_res = _sel_rows(rwp, result)
+        fired_src = _sel_rows(rwp, fired.astype(I32)[:, None]
+                              * jnp.ones((P, B), I32))
+        Rf_new = jnp.where((rwk == K_O)[:, None], from_o, Rf)
+        Rf_new = jnp.where((rwk == K_R)[:, None], from_r, Rf_new)
+        Rf_new = jnp.where(((rwk == K_RESULT)[:, None]) & (fired_src != 0),
+                           from_res, Rf_new)
+        O_new = jnp.where(fired[:, None], result, O)
+        return O_new, Rf_new, mem
+
+    O0 = jnp.zeros((P, B), I32)
+    R0 = jnp.zeros((P * R, B), I32)
+    _, _, mem = jax.lax.fori_loop(0, total_cycles, cycle, (O0, R0, mem0))
+    mem_out_ref[...] = mem
+
+
+def cgra_exec(linked: LinkedConfig, mem: jax.Array, n_iters: int, *,
+              lanes: int = 128, interpret: bool = False) -> jax.Array:
+    """Execute ``linked`` for ``n_iters`` iterations over mem (B, M) int32.
+
+    Returns the final scratchpad images, (B, M) int32.
+    """
+    B, M = mem.shape
+    bB = min(lanes, max(8, B))
+    pad = (-B) % bB
+    memT = jnp.pad(mem, ((0, pad), (0, 0))).T.astype(I32)     # (M, B')
+    total = linked.total_cycles(n_iters)
+    kernel = functools.partial(
+        _cgra_kernel, II=linked.II, n_pes=linked.n_pes,
+        n_regs=linked.n_regs, mem_pes=linked.mem_pes, n_iters=n_iters,
+        total_cycles=total)
+    S, P = linked.II, linked.n_pes
+    R = linked.n_regs
+    out = pl.pallas_call(
+        kernel,
+        grid=((B + pad) // bB,),
+        in_specs=[
+            pl.BlockSpec((S, P, 4), lambda i: (0, 0, 0)),
+            pl.BlockSpec((S, P, 3, 5), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((S, P, R, 3), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((M, bB), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((M, bB), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((M, B + pad), I32),
+        interpret=interpret,
+    )(jnp.asarray(linked.scalar), jnp.asarray(linked.ops),
+      jnp.asarray(linked.regw), memT)
+    return out.T[:B]

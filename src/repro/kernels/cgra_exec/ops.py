@@ -1,0 +1,22 @@
+"""Public wrapper: MachineConfig -> linked tables -> Pallas execution."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.machine import MachineConfig
+from repro.kernels.cgra_exec.kernel import cgra_exec
+from repro.kernels.cgra_exec.linking import LinkedConfig, link_config
+
+
+def cgra_exec_op(cfg: MachineConfig, mem: np.ndarray, n_iters: int, *,
+                 lanes: int = 128, interpret: bool = True) -> np.ndarray:
+    """Execute a mapped CGRA configuration over a batch of test vectors.
+
+    mem: (B, M) int32 scratchpad images.  interpret=True on CPU (the TPU
+    lowering is exercised by the dry-run harness, not here).
+    """
+    linked = link_config(cfg)
+    out = cgra_exec(linked, jnp.asarray(mem, jnp.int32), n_iters,
+                    lanes=lanes, interpret=interpret)
+    return np.asarray(out)

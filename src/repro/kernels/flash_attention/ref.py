@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Plain softmax attention.  q: (B,Sq,H,D); k/v: (B,Skv,KV,D)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, D) / math.sqrt(D)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qf, k.astype(jnp.float32))
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

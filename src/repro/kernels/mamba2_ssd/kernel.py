@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: chunked Mamba-2 SSD (state-space dual) scan.
+
+Same skeleton as the rwkv6 kernel: grid = (B*H, n_chunks) with the chunk
+axis innermost-sequential, per-head (P, N) state resident in VMEM scratch
+for the whole sequence.  The SSD decay is *scalar per head per token*
+(vs RWKV6's per-channel), so the intra-chunk weights collapse to an
+(L, L) matrix — all three products are MXU matmuls:
+
+    y_state = exp(cum) * (C @ S^T)               (L,N)(N,P)
+    y_intra = (tril(exp(cum_t - cum_i)) * (C B^T) * dt) @ x    (L,L)(L,P)
+    S'      = exp(cum_L) S + (dt * exp(cum_L - cum) * x)^T B   (P,L)(L,N)
+
+Host wrapper pre-computes la = -dt * exp(A_log) and adds the D*x skip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, la_ref, b_ref, c_ref, y_ref, s_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)                 # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)               # (L,)
+    la = la_ref[0].astype(jnp.float32)               # (L,), <= 0
+    Bm = b_ref[0].astype(jnp.float32)                # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (L, N)
+    L = chunk
+    state = s_scr[...]                               # (P, N)
+
+    cum = jnp.cumsum(la)                             # (L,) inclusive
+    # inter-chunk contribution
+    y_state = jnp.exp(cum)[:, None] * jax.lax.dot(Cm, state.T)   # (L, P)
+    # intra-chunk (causal, diagonal included)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) \
+        >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    expo = cum[:, None] - cum[None, :]
+    g = jnp.where(tri, jnp.exp(jnp.where(tri, expo, 0.0)), 0.0)
+    w = g * jax.lax.dot(Cm, Bm.T) * dt[None, :]      # (L, L)
+    y_intra = jax.lax.dot(w, x)                      # (L, P)
+    y_ref[0] = (y_state + y_intra).astype(y_ref.dtype)
+
+    # state update
+    decay_all = jnp.exp(cum[-1])
+    k_dec = dt * jnp.exp(cum[-1] - cum)              # (L,), exponent <= 0
+    s_scr[...] = state * decay_all + jax.lax.dot((x * k_dec[:, None]).T, Bm)
+
+
+def ssd(x, dt, A_log, B, C, D, *, chunk: int = 64, interpret: bool = False):
+    """Chunked SSD.  x: (B, S, H, P); dt: (B, S, H); B/C: (B, S, N);
+    A_log/D: (H,).  Returns y: (B, S, H, P)."""
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    n = pl.cdiv(S, chunk)
+    pad = n * chunk - S
+    la = -dt.astype(jnp.float32) \
+        * jnp.exp(A_log.astype(jnp.float32))[None, None, :]
+
+    xh = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+        .transpose(0, 2, 1, 3).reshape(Bsz * H, n * chunk, P)
+    dth = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))) \
+        .transpose(0, 2, 1).reshape(Bsz * H, n * chunk)
+    lah = jnp.pad(la, ((0, 0), (0, pad), (0, 0))) \
+        .transpose(0, 2, 1).reshape(Bsz * H, n * chunk)
+    Bp = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+    Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bsz * H, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci, h=H: (bh // h, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci, h=H: (bh // h, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz * H, n * chunk, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, lah, Bp, Cp)
+    y = y.reshape(Bsz, H, n * chunk, P).transpose(0, 2, 1, 3)[:, :S]
+    return (y.astype(jnp.float32)
+            + D.astype(jnp.float32)[None, None, :, None]
+            * x.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,11 @@
+"""Jitted public wrapper for the mamba2_ssd kernel."""
+import functools
+
+import jax
+
+from repro.kernels.mamba2_ssd.kernel import ssd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_op(x, dt, A_log, B, C, D, *, chunk: int = 64, interpret: bool = False):
+    return ssd(x, dt, A_log, B, C, D, chunk=chunk, interpret=interpret)

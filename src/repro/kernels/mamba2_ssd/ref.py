@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the mamba2_ssd kernel: sequential SSM recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A_log, B, C, D):
+    """Sequential SSD.  Shapes as in kernel.ssd."""
+    Bsz, S, H, P = x.shape
+    a = jnp.exp(-dt.astype(jnp.float32)
+                * jnp.exp(A_log.astype(jnp.float32))[None, None, :])
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)
+        St = state * a[:, t][..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t].astype(jnp.float32), xt,
+            B[:, t].astype(jnp.float32))
+        yt = jnp.einsum("bhpn,bn->bhp", St, C[:, t].astype(jnp.float32))
+        return St, yt
+
+    N = B.shape[-1]
+    _, ys = jax.lax.scan(step, jnp.zeros((Bsz, H, P, N), jnp.float32),
+                         jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)
+    return (y + D.astype(jnp.float32)[None, None, :, None]
+            * x.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: chunked RWKV-6 (Finch) WKV with data-dependent decay.
+
+The token recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T is the RecMII-style
+loop-carried dependence of this family (DESIGN.md §4) — the chunked form
+trades it for an intra-chunk quadratic with *non-positive* exponents (every
+exp() is safe) plus an inter-chunk state carry.
+
+Tiling: grid = (B*H, n_chunks), chunk axis innermost — TPU grids execute
+sequentially, so the (K, K) per-head state lives in VMEM scratch across the
+whole sequence and never round-trips HBM (the pure-jnp path carries it
+through a lax.scan in registers/HBM at XLA's mercy).  Block shapes are
+(1, L, K) with K a lane multiple (pad on host) and L the chunk length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *,
+                 chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)                 # (L, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)               # (L, K), <= 0
+    u = u_ref[0].astype(jnp.float32)                 # (K,)
+    L = chunk
+
+    cum = jnp.cumsum(lw, axis=0)                     # inclusive
+    cum_ex = cum - lw                                # exclusive
+    state = s_scr[...]
+
+    # inter-chunk: o_state[t] = (r_t * exp(cum_ex[t])) @ S
+    r_dec = r * jnp.exp(cum_ex)
+    o_state = jax.lax.dot(r_dec, state)              # (L, K)
+
+    # intra-chunk (strictly causal): a[t,i] = sum_d r k exp(cum_ex[t]-cum[i])
+    expo = cum_ex[:, None, :] - cum[None, :, :]      # (L, L, K)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) \
+        > jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    expo = jnp.where(tri[:, :, None], expo, -jnp.inf)
+    a = jnp.sum(r[:, None, :] * k[None, :, :] * jnp.exp(expo), axis=2)
+    o_intra = jax.lax.dot(a, v)                      # (L, K)
+
+    # diagonal bonus term
+    diag = jnp.sum(r * u[None, :] * k, axis=1)       # (L,)
+    o_ref[0] = (o_state + o_intra + diag[:, None] * v).astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(cum[-1])) S + sum_i exp(cum[-1]-cum[i]) k v^T
+    decay_all = jnp.exp(cum[-1])                     # (K,)
+    k_dec = k * jnp.exp(cum[-1:, :] - cum)           # (L, K), exponent <= 0
+    s_scr[...] = state * decay_all[:, None] + jax.lax.dot(k_dec.T, v)
+
+
+def wkv6(r, k, v, log_w, u, *, chunk: int = 32, interpret: bool = False):
+    """Chunked WKV6.  r,k,v,log_w: (B, S, H, K); u: (H, K) -> (B, S, H, K)."""
+    B, S, H, K = r.shape
+    n = pl.cdiv(S, chunk)
+    pad = n * chunk - S
+
+    def prep(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3).reshape(B * H, n * chunk, K)
+
+    rr, kk, vv, lw = (prep(x) for x in (r, k, v, log_w))
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, K), lambda bh, ci, h=H: (bh % h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, n * chunk, K), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, lw, u)
+    return out.reshape(B, H, n * chunk, K).transpose(0, 2, 1, 3)[:, :S]

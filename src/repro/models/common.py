@@ -1,0 +1,284 @@
+"""Model configuration + parameter initialization for the architecture zoo.
+
+One ``ModelConfig`` covers all ten assigned architectures; ``family``
+selects the block structure.  Parameters are plain pytrees (nested dicts of
+jnp arrays) with per-layer weights stacked on a leading axis so the forward
+pass is a ``lax.scan`` over layers — HLO stays O(1) in depth, which keeps
+the 512-device dry-run compiles tractable and is how production JAX LM
+frameworks (MaxText et al.) are built.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | rwkv6 | zamba2 | hubert | paligemma
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_kv_heads: int = 0              # 0 -> = n_heads
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # attention flavor
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0          # 0 = full attention
+    global_every: int = 0            # gemma3: every Nth layer global (0 = all)
+    causal: bool = True
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    dense_residual: bool = False     # arctic: dense FFN alongside experts
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    shared_attn_every: int = 0       # zamba2: shared attention period
+    # modality frontend (stub supplies embeddings)
+    frontend: str = "none"           # none | audio | image
+    n_prefix_tokens: int = 0         # paligemma image tokens
+    # numerics
+    dtype: Any = jnp.bfloat16
+    mlp_act: str = "silu"            # silu | gelu
+    tie_embeddings: bool = True
+    # distribution strategy (see repro.sharding.specs):
+    #   tp2d — FSDP(data) x TP(model), Megatron column->row pairs (default)
+    #   fsdp — pure ZeRO-3: params/optimizer/batch sharded over the combined
+    #          (data, model) axes, no tensor parallelism.  Beyond-paper §Perf
+    #          lever: removes per-layer activation all-reduces at the price
+    #          of per-layer parameter all-gathers.
+    shard_strategy: str = "tp2d"
+    #   auto   — let XLA place gradient reductions (baseline)
+    #   pinned — with_sharding_constraint grads to the param shardings so
+    #            FSDP reductions lower to reduce-scatter (§Perf lever)
+    grad_reduce: str = "auto"
+    # KV block size of the pure-JAX blockwise attention (0 = one full block;
+    # §Perf lever: the scan carry costs HBM round-trips per block on the
+    # XLA path, while the Pallas kernel keeps it in VMEM)
+    attn_block_kv: int = 512
+    # MoE dispatch groups (GShard-style local groups).  1 = single global
+    # dispatch with a global prefix-sum (baseline).  Set to the DP degree so
+    # each data shard dispatches into its own capacity slice and the
+    # cross-shard exchange lowers to the EP all-to-all instead of
+    # full-buffer all-reduces (§Perf lever).
+    moe_groups: int = 1
+    # attention TP layout: "auto" (baseline: weights sharded on the flat
+    # H*D dim; XLA may split head_dim across devices and pay pairwise
+    # score reductions) | "heads" (constrain q/k/v to whole-head sharding;
+    # KV heads replicate when kv_heads % tp != 0 — §Perf lever for GQA)
+    attn_head_shard: str = "auto"
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def scaled(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter counting (MODEL_FLOPS uses these) ------------------------
+    def param_count(self) -> int:
+        c = self
+        d, hd = c.d_model, c.hd
+        emb = c.vocab * d
+        per_layer = 0
+        if c.family in ("dense", "moe", "hubert", "paligemma"):
+            attn = d * hd * (c.n_heads + 2 * c.kv_heads) + c.n_heads * hd * d
+            per_layer += attn + 2 * d                      # + norms
+            if c.family == "moe":
+                eff = c.expert_d_ff or c.d_ff
+                per_layer += 3 * d * eff * (c.n_experts + c.n_shared_experts)
+                per_layer += d * c.n_experts               # router
+                if c.dense_residual:
+                    per_layer += 3 * d * c.d_ff
+            else:
+                n_mats = 3 if c.mlp_act == "silu" else 2
+                per_layer += n_mats * d * c.d_ff
+        elif c.family == "rwkv6":
+            per_layer = 6 * d * d + 3 * d * c.d_ff + 4 * d
+        elif c.family == "zamba2":
+            d_in = 2 * d
+            per_layer = (d * (2 * d_in + 2 * c.ssm_state) + d_in * d
+                         + 4 * d)                           # mamba2 mixer approx
+        n = emb + c.n_layers * per_layer
+        if c.family == "zamba2" and c.shared_attn_every:
+            attn = d * hd * (c.n_heads + 2 * c.kv_heads) + c.n_heads * hd * d
+            n += attn + 3 * d * c.d_ff
+        return n
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        c = self
+        d = c.d_model
+        eff = c.expert_d_ff or c.d_ff
+        total = self.param_count()
+        inactive = 3 * d * eff * (c.n_experts - c.top_k) * c.n_layers
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all stacked over layers on axis 0)
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale or (1.0 / math.sqrt(shape[-2] if len(shape) > 1 else shape[-1]))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attention(key, c: ModelConfig, n_layers: int, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    d, hd, H, KV = c.d_model, c.hd, c.n_heads, c.kv_heads
+    p = {
+        "wq": _dense(ks[0], (n_layers, d, H * hd), dtype=dtype),
+        "wk": _dense(ks[1], (n_layers, d, KV * hd), dtype=dtype),
+        "wv": _dense(ks[2], (n_layers, d, KV * hd), dtype=dtype),
+        "wo": _dense(ks[3], (n_layers, H * hd, d), dtype=dtype),
+    }
+    if c.qk_norm:
+        p["q_norm"] = jnp.ones((n_layers, hd), dtype)
+        p["k_norm"] = jnp.ones((n_layers, hd), dtype)
+    return p
+
+
+def init_mlp(key, d_in, d_ff, n_layers, act, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": _dense(ks[0], (n_layers, d_in, d_ff), dtype=dtype),
+        "w_down": _dense(ks[1], (n_layers, d_ff, d_in), dtype=dtype),
+    }
+    if act == "silu":
+        p["w_gate"] = _dense(ks[2], (n_layers, d_in, d_ff), dtype=dtype)
+    return p
+
+
+def init_moe(key, c: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, E, L = c.d_model, c.n_experts, c.n_layers
+    eff = c.expert_d_ff or c.d_ff
+    p = {
+        "router": _dense(ks[0], (L, d, E), scale=0.02, dtype=jnp.float32),
+        "we_gate": _dense(ks[1], (L, E, d, eff), dtype=dtype),
+        "we_up": _dense(ks[2], (L, E, d, eff), dtype=dtype),
+        "we_down": _dense(ks[3], (L, E, eff, d), dtype=dtype),
+    }
+    if c.n_shared_experts:
+        S = c.n_shared_experts
+        p["ws_gate"] = _dense(ks[4], (L, d, S * eff), dtype=dtype)
+        p["ws_up"] = _dense(ks[5], (L, d, S * eff), dtype=dtype)
+        p["ws_down"] = _dense(ks[6], (L, S * eff, d), dtype=dtype)
+    if c.dense_residual:
+        p["dense"] = init_mlp(ks[7], d, c.d_ff, L, c.mlp_act, dtype)
+    return p
+
+
+def init_rwkv6(key, c: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 12)
+    d, L = c.d_model, c.n_layers
+    H = c.n_heads
+    hd = d // H
+    p = {
+        "mix": _dense(ks[0], (L, 5, d), scale=0.5, dtype=dtype),   # token-shift mixes r,k,v,w,g
+        "wr": _dense(ks[1], (L, d, d), dtype=dtype),
+        "wk": _dense(ks[2], (L, d, d), dtype=dtype),
+        "wv": _dense(ks[3], (L, d, d), dtype=dtype),
+        "wg": _dense(ks[4], (L, d, d), dtype=dtype),
+        "ww": _dense(ks[5], (L, d, d), scale=0.01, dtype=dtype),   # data-dependent decay
+        "w_bias": jnp.full((L, d), -5.0, dtype),
+        "u": _dense(ks[6], (L, d), scale=0.5, dtype=dtype),        # bonus
+        "wo": _dense(ks[7], (L, d, d), dtype=dtype),
+        "ln_x": jnp.ones((L, d), dtype),
+        "ffn_k": _dense(ks[8], (L, d, c.d_ff), dtype=dtype),
+        "ffn_v": _dense(ks[9], (L, c.d_ff, d), dtype=dtype),
+        "ffn_r": _dense(ks[10], (L, d, d), dtype=dtype),
+        "norm1": jnp.ones((L, d), dtype),
+        "norm2": jnp.ones((L, d), dtype),
+    }
+    return p
+
+
+def init_mamba2(key, c: ModelConfig, n_layers: int, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    d, N = c.d_model, c.ssm_state
+    P = c.ssm_head_dim
+    H = max(1, (2 * d) // P)          # expand factor 2
+    d_in = H * P
+    p = {
+        "w_in": _dense(ks[0], (n_layers, d, 2 * d_in + 2 * N + H), dtype=dtype),
+        "conv_w": _dense(ks[1], (n_layers, c.ssm_conv, d_in + 2 * N),
+                         scale=0.5, dtype=dtype),
+        "A_log": jnp.zeros((n_layers, H), jnp.float32),
+        "D": jnp.ones((n_layers, H), dtype),
+        "dt_bias": jnp.zeros((n_layers, H), jnp.float32),
+        "w_out": _dense(ks[2], (n_layers, d_in, d), dtype=dtype),
+        "norm": jnp.ones((n_layers, d), dtype),
+        "gate_norm": jnp.ones((n_layers, d_in), dtype),
+    }
+    return p
+
+
+def init_params(key, c: ModelConfig) -> Dict:
+    """Full parameter pytree for any family."""
+    dtype = c.dtype
+    ks = jax.random.split(key, 10)
+    d, L = c.d_model, c.n_layers
+    params: Dict[str, Any] = {
+        "embed": _dense(ks[0], (c.vocab, d), scale=0.02, dtype=dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not c.tie_embeddings:
+        params["lm_head"] = _dense(ks[9], (d, c.vocab), dtype=dtype)
+    if c.family in ("dense", "hubert", "paligemma"):
+        params["attn"] = init_attention(ks[1], c, L, dtype)
+        params["mlp"] = init_mlp(ks[2], d, c.d_ff, L, c.mlp_act, dtype)
+        params["norm1"] = jnp.ones((L, d), dtype)
+        params["norm2"] = jnp.ones((L, d), dtype)
+    elif c.family == "moe":
+        params["attn"] = init_attention(ks[1], c, L, dtype)
+        params["moe"] = init_moe(ks[2], c, dtype)
+        params["norm1"] = jnp.ones((L, d), dtype)
+        params["norm2"] = jnp.ones((L, d), dtype)
+    elif c.family == "rwkv6":
+        params["rwkv"] = init_rwkv6(ks[1], c, dtype)
+    elif c.family == "zamba2":
+        params["mamba"] = init_mamba2(ks[1], c, L, dtype)
+        shared = ModelConfig(name="shared", family="dense", n_layers=1,
+                             d_model=d, n_heads=c.n_heads, d_ff=c.d_ff,
+                             vocab=1, n_kv_heads=c.n_kv_heads,
+                             dtype=c.dtype)
+        params["shared_attn"] = init_attention(ks[2], shared, 1, dtype)
+        params["shared_mlp"] = init_mlp(ks[3], d, c.d_ff, 1, c.mlp_act, dtype)
+        params["shared_norm1"] = jnp.ones((1, d), dtype)
+        params["shared_norm2"] = jnp.ones((1, d), dtype)
+    else:
+        raise ValueError(f"unknown family {c.family}")
+    if c.frontend == "audio":
+        params["frontend_proj"] = _dense(ks[4], (c.d_model, c.d_model),
+                                         dtype=dtype)
+        params["mask_embed"] = _dense(ks[5], (d,), scale=0.02, dtype=dtype)
+    if c.frontend == "image":
+        params["img_proj"] = _dense(ks[4], (c.d_model, c.d_model), dtype=dtype)
+    return params
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

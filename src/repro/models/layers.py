@@ -1,0 +1,172 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / prefix-LM), gated MLPs.
+
+Attention is computed blockwise over the KV axis with an online-softmax
+carry (a pure-JAX flash attention): memory stays O(seq * block) instead of
+O(seq^2), every block step is rematerialized in the backward pass, and the
+same blocking mirrors the Pallas kernel in `kernels/flash_attention` (the
+TPU hot path; this jnp version is its oracle and the dry-run lowering).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding.  x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32)
+                    / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp(x, p, layer_sel, act: str = "silu"):
+    """Gated MLP; ``layer_sel`` indexes stacked weights (or None)."""
+    w_up = p["w_up"] if layer_sel is None else p["w_up"][layer_sel]
+    w_down = p["w_down"] if layer_sel is None else p["w_down"][layer_sel]
+    up = x @ w_up
+    if act == "silu":
+        w_gate = p["w_gate"] if layer_sel is None else p["w_gate"][layer_sel]
+        h = jax.nn.silu(x @ w_gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention, pure JAX
+# ---------------------------------------------------------------------------
+
+def _mask_block(q_pos, k_pos, causal: bool, window, prefix_len):
+    """(Bq, Bk) boolean mask for one block pair.
+
+    ``window`` may be a traced int32 (per-layer value under lax.scan); a
+    huge value (GLOBAL) disables the sliding window without retracing.
+    """
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        c = q_pos[:, None] >= k_pos[None, :]
+        if prefix_len is not None:
+            # prefix-LM: bidirectional over the first ``prefix_len`` tokens
+            c = c | (k_pos[None, :] < prefix_len)
+        m &= c
+    m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window=1 << 30,
+                        prefix_len=None, q_offset=0, block_kv: int = 512,
+                        softmax_scale: Optional[float] = None):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, KV, D) — GQA via head grouping.
+    ``q_offset``: absolute position of q[0] (decode / chunked prefill).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = softmax_scale or (1.0 / math.sqrt(D))
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    block_kv = min(block_kv, Skv)
+    n_blocks = max(1, (Skv + block_kv - 1) // block_kv)
+    pad = n_blocks * block_kv - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(B, n_blocks, block_kv, KV, D).astype(jnp.float32)
+    vb = vp.reshape(B, n_blocks, block_kv, KV, D).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, blk):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, blk_idx = blk
+        k_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        # scores: (B, Sq, KV, G, block)
+        s = jnp.einsum("bqkgd,bnkd->bqkgn", qf, k_blk)
+        mask = _mask_block(q_pos, k_pos, causal, window, prefix_len)
+        mask &= (k_pos < Skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgn,bnkd->bqkgd", p, v_blk)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, Sq, KV, G), jnp.float32),
+        jnp.zeros((B, Sq, KV, G, D), jnp.float32),
+    )
+    blks = (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+            jnp.arange(n_blocks))
+    step_remat = jax.checkpoint(step, prevent_cse=False)
+    (m_f, l_f, acc), _ = jax.lax.scan(step_remat, init, blks)
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_block(x, p, layer_sel, cfg, positions, *, causal=True,
+                    window=1 << 30, prefix_len=None, block_kv: int = 512):
+    """Full attention sub-block: projections + RoPE (+qk-norm) + blockwise."""
+    sel = (lambda w: w if layer_sel is None else w[layer_sel])
+    B, S, d = x.shape
+    H, KV, D = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = (x @ sel(p["wq"])).reshape(B, S, H, D)
+    k = (x @ sel(p["wk"])).reshape(B, S, KV, D)
+    v = (x @ sel(p["wv"])).reshape(B, S, KV, D)
+    if getattr(cfg, "attn_head_shard", "auto") == "heads":
+        q = constrain(q, "q_heads")
+        k = constrain(k, "kv_heads")
+        v = constrain(v, "kv_heads")
+    if cfg.qk_norm:
+        q = rms_norm(q, sel(p["q_norm"]))
+        k = rms_norm(k, sel(p["k_norm"]))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, causal=causal, window=window,
+                            prefix_len=prefix_len, block_kv=block_kv)
+    return o.reshape(B, S, H * D) @ sel(p["wo"])
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=1 << 30):
+    """Single-token decode over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, KV, D); ``cache_len``: current length
+    (the new token is already written at cache_len-1).
+    """
+    B, _, H, D = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    G = H // KV
+    qf = (q.astype(jnp.float32) / math.sqrt(D)).reshape(B, KV, G, D)
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kf)          # (B, KV, G, Smax)
+    pos = jnp.arange(Smax)
+    clen = jnp.reshape(jnp.asarray(cache_len), (-1, 1))  # (1,1) or (B,1)
+    valid = pos[None, :] < clen                          # (B?, Smax)
+    valid &= pos[None, :] >= (clen - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)

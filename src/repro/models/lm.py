@@ -1,0 +1,363 @@
+"""Unified model assembly: forward pass, loss, and decode for every family.
+
+All families share the same skeleton: embed -> lax.scan over layer stacks ->
+final RMSNorm -> (tied) logits.  Per-layer parameters are stacked pytrees
+that the scan slices, so the lowered HLO is depth-independent.  Sharding
+constraints are injected by `repro.sharding.partition` (the functions here
+are sharding-agnostic and runnable on one CPU device for smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import (attention_block, blockwise_attention,
+                                 decode_attention, mlp, rms_norm, rope)
+from repro.models.mamba2 import _split_proj, mamba2_layer
+from repro.models.moe import moe_block
+from repro.models.rwkv6 import rwkv6_decode_step, rwkv6_layer
+from repro.sharding.ctx import constrain
+
+GLOBAL_WINDOW = 1 << 30      # "window" that never masks anything
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (gemma3 local:global / SWA / full)."""
+    L = cfg.n_layers
+    if cfg.global_every:
+        w = [cfg.sliding_window if (i + 1) % cfg.global_every else
+             GLOBAL_WINDOW for i in range(L)]
+    elif cfg.sliding_window:
+        w = [cfg.sliding_window] * L
+    else:
+        w = [GLOBAL_WINDOW] * L
+    return jnp.array(w, jnp.int32)
+
+
+def _embed(params, cfg, tokens):
+    h = params["embed"][tokens].astype(cfg.dtype) * (cfg.d_model ** 0.5)
+    return constrain(h, "hidden")
+
+
+def _logits(params, cfg, h):
+    h = rms_norm(h, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return constrain(h @ head.astype(h.dtype), "logits")
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (training / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens=None, *, features=None,
+            feat_mask=None, img_embeds=None, block_kv: int = 0):
+    """Returns (logits (B,S,V), aux_loss scalar)."""
+    block_kv = block_kv or getattr(cfg, "attn_block_kv", 512) or (1 << 30)
+    if cfg.family in ("dense", "moe", "paligemma"):
+        return _forward_transformer(params, cfg, tokens,
+                                    img_embeds=img_embeds, block_kv=block_kv)
+    if cfg.family == "hubert":
+        return _forward_hubert(params, cfg, features, feat_mask, block_kv)
+    if cfg.family == "rwkv6":
+        return _forward_rwkv6(params, cfg, tokens)
+    if cfg.family == "zamba2":
+        return _forward_zamba2(params, cfg, tokens, block_kv)
+    raise ValueError(cfg.family)
+
+
+def _forward_transformer(params, cfg, tokens, img_embeds=None,
+                         block_kv: int = 512):
+    B, S = tokens.shape
+    h = _embed(params, cfg, tokens)
+    prefix_len = None
+    if cfg.family == "paligemma" and img_embeds is not None:
+        img = img_embeds.astype(cfg.dtype) @ params["img_proj"]
+        h = jnp.concatenate([img, h], axis=1)
+        prefix_len = img_embeds.shape[1]
+    positions = jnp.arange(h.shape[1])[None, :]
+    windows = layer_windows(cfg)
+    stacked = {"attn": params["attn"], "norm1": params["norm1"],
+               "norm2": params["norm2"]}
+    stacked["ffn"] = params["moe"] if cfg.family == "moe" else params["mlp"]
+
+    def block(carry, xs):
+        h, aux = carry
+        lp, win = xs
+        a = attention_block(rms_norm(h, lp["norm1"]), lp["attn"], None, cfg,
+                            positions, causal=cfg.causal, window=win,
+                            prefix_len=prefix_len, block_kv=block_kv)
+        h = h + a
+        hn = rms_norm(h, lp["norm2"])
+        if cfg.family == "moe":
+            f, a_loss = moe_block(hn, lp["ffn"], cfg)
+            aux = aux + a_loss
+        else:
+            f = mlp(hn, lp["ffn"], None, cfg.mlp_act)
+        return (constrain(h + f, "hidden"), aux), None
+
+    block = jax.checkpoint(block, prevent_cse=False)
+    (h, aux), _ = jax.lax.scan(block, (h, jnp.zeros((), jnp.float32)),
+                               (stacked, windows))
+    logits = _logits(params, cfg, h)
+    if prefix_len is not None:
+        logits = logits[:, prefix_len:]
+    return logits, aux / cfg.n_layers
+
+
+def _forward_hubert(params, cfg, features, feat_mask, block_kv):
+    """Encoder over (masked) frame features; predicts codebook targets."""
+    B, S, d = features.shape
+    h = constrain(features.astype(cfg.dtype) @ params["frontend_proj"],
+                  "hidden")
+    if feat_mask is not None:
+        h = jnp.where(feat_mask[..., None],
+                      params["mask_embed"].astype(cfg.dtype)[None, None, :], h)
+    positions = jnp.arange(S)[None, :]
+    stacked = {"attn": params["attn"], "norm1": params["norm1"],
+               "norm2": params["norm2"], "ffn": params["mlp"]}
+
+    def block(h, lp):
+        a = attention_block(rms_norm(h, lp["norm1"]), lp["attn"], None, cfg,
+                            positions, causal=False, window=GLOBAL_WINDOW,
+                            block_kv=block_kv)
+        h = h + a
+        f = mlp(rms_norm(h, lp["norm2"]), lp["ffn"], None, cfg.mlp_act)
+        return constrain(h + f, "hidden"), None
+
+    block = jax.checkpoint(block, prevent_cse=False)
+    h, _ = jax.lax.scan(block, h, stacked)
+    return _logits(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+def _forward_rwkv6(params, cfg, tokens):
+    B, S = tokens.shape
+    h = _embed(params, cfg, tokens)
+    zeros = jnp.zeros((B, cfg.d_model), cfg.dtype)
+
+    def block(h, lp):
+        h, _, _ = rwkv6_layer(h, zeros, zeros, lp, cfg)
+        return constrain(h, "hidden"), None
+
+    block = jax.checkpoint(block, prevent_cse=False)
+    h, _ = jax.lax.scan(block, h, params["rwkv"])
+    return _logits(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+def _forward_zamba2(params, cfg, tokens, block_kv: int = 512):
+    """Mamba2 backbone with a shared attention block every k layers."""
+    B, S = tokens.shape
+    h = _embed(params, cfg, tokens)
+    k = cfg.shared_attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(
+        lambda w: w.reshape(n_groups, k, *w.shape[1:]), params["mamba"])
+    positions = jnp.arange(S)[None, :]
+
+    def shared_block(h):
+        a = attention_block(rms_norm(h, params["shared_norm1"][0]),
+                            jax.tree.map(lambda w: w[0], params["shared_attn"]),
+                            None, cfg, positions, causal=True,
+                            window=GLOBAL_WINDOW, block_kv=block_kv)
+        h = h + a
+        f = mlp(rms_norm(h, params["shared_norm2"][0]),
+                jax.tree.map(lambda w: w[0], params["shared_mlp"]),
+                None, cfg.mlp_act)
+        return h + f
+
+    def group(h, gp):
+        def inner(h, lp):
+            h, _, _ = mamba2_layer(h, lp, cfg)
+            return constrain(h, "hidden"), None
+        h, _ = jax.lax.scan(jax.checkpoint(inner, prevent_cse=False), h, gp)
+        return constrain(shared_block(h), "hidden"), None
+
+    h, _ = jax.lax.scan(group, h, grouped)
+    return _logits(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, Any],
+            aux_weight: float = 0.01, z_weight: float = 1e-4):
+    """Next-token (or masked-prediction) loss; returns (loss, metrics)."""
+    if cfg.family == "hubert":
+        logits, aux = forward(params, cfg, features=batch["features"],
+                              feat_mask=batch["mask"])
+        targets, mask = batch["targets"], batch["mask"]
+    else:
+        tokens = batch["tokens"]
+        inp, targets = tokens[:, :-1], tokens[:, 1:]
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(targets, bool) if mask is None else mask[:, 1:]
+        logits, aux = forward(params, cfg, inp,
+                              img_embeds=batch.get("img_embeds"))
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = nll.sum() / denom
+    zloss = z_weight * (jnp.square(logz) * mask).sum() / denom
+    total = loss + zloss + aux_weight * aux
+    return total, {"loss": loss, "zloss": zloss, "aux": aux,
+                   "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    L, KV, D = cfg.n_layers, cfg.kv_heads, cfg.hd
+    if cfg.family in ("dense", "moe", "paligemma"):
+        return {
+            "k": jnp.zeros((L, batch, max_len, KV, D), cfg.dtype),
+            "v": jnp.zeros((L, batch, max_len, KV, D), cfg.dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "rwkv6":
+        d = cfg.d_model
+        H, K = cfg.n_heads, cfg.d_model // cfg.n_heads
+        return {
+            "wkv": jnp.zeros((L, batch, H, K, K), jnp.float32),
+            "tmix": jnp.zeros((L, batch, d), cfg.dtype),
+            "cmix": jnp.zeros((L, batch, d), cfg.dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "zamba2":
+        P = cfg.ssm_head_dim
+        H = max(1, (2 * cfg.d_model) // P)
+        N = cfg.ssm_state
+        d_in = H * P
+        G = cfg.n_layers // (cfg.shared_attn_every or cfg.n_layers)
+        return {
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, d_in + 2 * N),
+                              cfg.dtype),
+            "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+            "k": jnp.zeros((G, batch, max_len, KV, D), cfg.dtype),
+            "v": jnp.zeros((G, batch, max_len, KV, D), cfg.dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(f"no decode cache for {cfg.family} (encoder-only?)")
+
+
+def decode_step(params, cfg: ModelConfig, cache, token):
+    """One decode step.  token: (B, 1) int32 -> (logits (B,1,V), cache)."""
+    if cfg.family in ("dense", "moe", "paligemma"):
+        return _decode_transformer(params, cfg, cache, token)
+    if cfg.family == "rwkv6":
+        return _decode_rwkv6(params, cfg, cache, token)
+    if cfg.family == "zamba2":
+        return _decode_zamba2(params, cfg, cache, token)
+    raise ValueError(cfg.family)
+
+
+def _decode_transformer(params, cfg, cache, token):
+    B = token.shape[0]
+    h = _embed(params, cfg, token)                       # (B, 1, d)
+    pos = cache["len"]
+    positions = pos[None, None]
+    windows = layer_windows(cfg)
+    H, KV, D = cfg.n_heads, cfg.kv_heads, cfg.hd
+    stacked = {"attn": params["attn"], "norm1": params["norm1"],
+               "norm2": params["norm2"],
+               "ffn": params["moe"] if cfg.family == "moe" else params["mlp"]}
+
+    def block(h, xs):
+        lp, win, kc, vc = xs
+        x = rms_norm(h, lp["norm1"])
+        p = lp["attn"]
+        q = (x @ p["wq"]).reshape(B, 1, H, D)
+        k = (x @ p["wk"]).reshape(B, 1, KV, D)
+        v = (x @ p["wv"]).reshape(B, 1, KV, D)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+            k = rms_norm(k, p["k_norm"])
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = decode_attention(q, kc, vc, pos + 1, window=win)
+        h = h + o.reshape(B, 1, H * D) @ p["wo"]
+        hn = rms_norm(h, lp["norm2"])
+        if cfg.family == "moe":
+            f, _ = moe_block(hn, lp["ffn"], cfg)
+        else:
+            f = mlp(hn, lp["ffn"], None, cfg.mlp_act)
+        return h + f, (kc, vc)
+
+    h, (kc, vc) = jax.lax.scan(block, h,
+                               (stacked, windows, cache["k"], cache["v"]))
+    cache = dict(cache, k=kc, v=vc, len=pos + 1)
+    return _logits(params, cfg, h), cache
+
+
+def _decode_rwkv6(params, cfg, cache, token):
+    B = token.shape[0]
+    h = _embed(params, cfg, token)[:, 0]                 # (B, d)
+
+    def block(h, xs):
+        lp, tmix, cmix, wkv = xs
+        h, tmix2, cmix2, wkv2 = rwkv6_decode_step(h, tmix, cmix, wkv, lp, cfg)
+        return h, (tmix2, cmix2, wkv2)
+
+    h, (tmix, cmix, wkv) = jax.lax.scan(
+        block, h, (params["rwkv"], cache["tmix"], cache["cmix"], cache["wkv"]))
+    cache = dict(cache, tmix=tmix, cmix=cmix, wkv=wkv, len=cache["len"] + 1)
+    return _logits(params, cfg, h[:, None, :]), cache
+
+
+def _decode_zamba2(params, cfg, cache, token):
+    B = token.shape[0]
+    h = _embed(params, cfg, token)                       # (B, 1, d)
+    pos = cache["len"]
+    k_per = cfg.shared_attn_every or cfg.n_layers
+    G = cfg.n_layers // k_per
+    H, KV, D = cfg.n_heads, cfg.kv_heads, cfg.hd
+    grouped = jax.tree.map(
+        lambda w: w.reshape(G, k_per, *w.shape[1:]), params["mamba"])
+    conv_g = cache["conv"].reshape(G, k_per, *cache["conv"].shape[1:])
+    ssm_g = cache["ssm"].reshape(G, k_per, *cache["ssm"].shape[1:])
+    positions = pos[None, None]
+
+    def group(h, xs):
+        gp, convs, ssms, kc, vc = xs
+
+        def inner(h, ys):
+            lp, conv, ssm = ys
+            h, conv2, ssm2 = mamba2_layer(h, lp, cfg, conv_state=conv,
+                                          ssm_state=ssm, decode=True)
+            return h, (conv2, ssm2)
+
+        h, (convs2, ssms2) = jax.lax.scan(inner, h, (gp, convs, ssms))
+        # shared attention block over the cache
+        p = jax.tree.map(lambda w: w[0], params["shared_attn"])
+        x = rms_norm(h, params["shared_norm1"][0])
+        q = (x @ p["wq"]).reshape(B, 1, H, D)
+        k = (x @ p["wk"]).reshape(B, 1, KV, D)
+        v = (x @ p["wv"]).reshape(B, 1, KV, D)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = decode_attention(q, kc, vc, pos + 1, window=GLOBAL_WINDOW)
+        h = h + o.reshape(B, 1, H * D) @ p["wo"]
+        f = mlp(rms_norm(h, params["shared_norm2"][0]),
+                jax.tree.map(lambda w: w[0], params["shared_mlp"]),
+                None, cfg.mlp_act)
+        return h + f, (convs2, ssms2, kc, vc)
+
+    h, (convs, ssms, kc, vc) = jax.lax.scan(
+        group, h, (grouped, conv_g, ssm_g, cache["k"], cache["v"]))
+    cache = dict(cache,
+                 conv=convs.reshape(cache["conv"].shape),
+                 ssm=ssms.reshape(cache["ssm"].shape),
+                 k=kc, v=vc, len=pos + 1)
+    return _logits(params, cfg, h), cache

@@ -1,0 +1,144 @@
+"""Mamba-2 (SSD) mixer for the Zamba2 hybrid.
+
+State-space dual form: scalar decay per head per token, chunked exactly
+like the RWKV6 path (intra-chunk quadratic with non-positive exponents,
+inter-chunk state scan).  Decode keeps an O(1) (conv, state) cache.
+
+Recurrence (per head h, state S in R^{P x N}):
+    S_t = a_t S_{t-1} + dt_t (x_t B_t^T)
+    y_t = S_t C_t + D x_t
+with a_t = exp(-dt_t * exp(A_log_h)).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def _split_proj(z, cfg):
+    """Split the fused input projection into (x, gate, B, C, dt)."""
+    P = cfg.ssm_head_dim
+    H = max(1, (2 * cfg.d_model) // P)
+    d_in = H * P
+    N = cfg.ssm_state
+    x, gate, B, C, dt = jnp.split(
+        z, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return x, gate, B, C, dt, H, P, N, d_in
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv1d.  x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out), xp[:, -(K - 1):, :]
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, chunk: int = 64):
+    """Chunked SSD.  x: (B, S, H, P); dt: (B, S, H); B/C: (B, S, N).
+
+    Returns y: (B, S, H, P).
+    """
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    xf = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.float32)
+    dtf = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    Bf = jnp.pad(B, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    Cf = jnp.pad(C, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    la = -dtf * jnp.exp(A_log.astype(jnp.float32))[None, None, :]   # (B,S,H) <= 0
+    xc = xf.reshape(Bsz, n, chunk, H, P)
+    dtc = dtf.reshape(Bsz, n, chunk, H)
+    Bc = Bf.reshape(Bsz, n, chunk, N)
+    Cc = Cf.reshape(Bsz, n, chunk, N)
+    lac = la.reshape(Bsz, n, chunk, H)
+
+    def chunk_step(state, blk):                        # state: (B, H, P, N)
+        xb, dtb, Bb, Cb, lab = blk
+        cum = jnp.cumsum(lab, axis=1)                  # (B, L, H) inclusive
+        # state contribution: y_t += exp(cum[t]) * S0 C_t
+        y_state = jnp.einsum("bhpn,bln,blh->blhp",
+                             state, Cb, jnp.exp(cum))
+        # intra-chunk: y_t += sum_{i<=t} exp(cum[t]-cum[i]) dt_i (C_t.B_i) x_i
+        L = xb.shape[1]
+        expo = cum[:, :, None] - cum[:, None, :, :]    # (B, L, L, H), <=0 for i<=t
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        g = jnp.where(tri[None, :, :, None], jnp.exp(
+            jnp.where(tri[None, :, :, None], expo, 0.0)), 0.0)
+        cb = jnp.einsum("bln,bin->bli", Cb, Bb)        # (B, L, L)
+        w = g * cb[..., None] * dtb[:, None, :, :]     # (B, L, L, H)
+        y_intra = jnp.einsum("blih,bihp->blhp", w, xb)
+        # state update
+        decay_all = jnp.exp(cum[:, -1])                # (B, H)
+        k_dec = jnp.exp(cum[:, -1:, :] - cum) * dtb    # (B, L, H) <= 0 exponent
+        state_new = state * decay_all[..., None, None] + jnp.einsum(
+            "blh,blhp,bln->bhpn", k_dec, xb, Bb)
+        return state_new, y_state + y_intra
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    blks = tuple(jnp.moveaxis(z, 1, 0) for z in (xc, dtc, Bc, Cc, lac))
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step, prevent_cse=False),
+                         init, blks)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, n * chunk, H, P)[:, :S]
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ssd_sequential(x, dt, A_log, B, C, D):
+    """Sequential oracle for tests."""
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    a = jnp.exp(-dt.astype(jnp.float32)
+                * jnp.exp(A_log.astype(jnp.float32))[None, None, :])
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)
+        St = state * a[:, t][..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t].astype(jnp.float32), xt, B[:, t].astype(jnp.float32))
+        yt = jnp.einsum("bhpn,bn->bhp", St, C[:, t].astype(jnp.float32))
+        return St, yt
+
+    _, ys = jax.lax.scan(step, jnp.zeros((Bsz, H, P, N), jnp.float32),
+                         jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)
+    return (y + D.astype(jnp.float32)[None, None, :, None]
+            * x.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba2_layer(x, p, cfg, conv_state=None, ssm_state=None,
+                 decode: bool = False):
+    """Full Mamba2 block.  x: (B, S, d).  Returns (out, conv_state, ssm_state)."""
+    B_, S, d = x.shape
+    h = rms_norm(x, p["norm"])
+    z = h @ p["w_in"]
+    xin, gate, Bv, Cv, dt, H, P, N, d_in = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xin, Bv, Cv = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    xh = xin.reshape(B_, S, H, P)
+    if decode:
+        a = jnp.exp(-dt[:, 0] * jnp.exp(p["A_log"])[None, :])
+        new_state = ssm_state * a[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32),
+            Bv[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", new_state,
+                       Cv[:, 0].astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32)[None, :, None] \
+            * xh[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)
+    else:
+        y = ssd_chunked(xh, dt, p["A_log"], Bv, Cv, p["D"])
+        new_state = ssm_state
+    y = y.reshape(B_, S, d_in)
+    y = rms_norm(y, p["gate_norm"]) * jax.nn.silu(gate)
+    return x + y @ p["w_out"], new_conv, new_state

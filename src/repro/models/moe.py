@@ -1,0 +1,179 @@
+"""Mixture-of-Experts layers: DeepSeek-MoE (fine-grained, shared experts)
+and Arctic (many-expert top-2 + dense residual).
+
+Dispatch is capacity-based (tokens beyond an expert's capacity are dropped,
+their residual passes through) using the sort-free cumsum formulation:
+position-in-expert comes from a prefix sum of the routing one-hots, tokens
+scatter into (E * C, d) buffers, experts run as one batched einsum, and
+results gather back with the routing weights.  This formulation lowers to
+dense einsums + one scatter/gather pair — predictable roofline terms and
+clean expert-parallel sharding (experts sharded over the 'model' axis; the
+scatter becomes the EP all-to-all).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp
+from repro.sharding.ctx import constrain
+
+
+def router_topk(logits, k: int, renorm: bool = True):
+    """Top-k routing weights.  logits: (T, E) float32."""
+    gates = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(gates, k)                    # (T, k)
+    if renorm:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def aux_load_balance_loss(logits, idx, n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss."""
+    gates = jax.nn.softmax(logits, axis=-1)
+    me = gates.mean(0)                                   # mean gate per expert
+    onehot = jax.nn.one_hot(idx[..., 0], n_experts, dtype=gates.dtype)
+    ce = onehot.mean(0)                                  # fraction routed (top-1)
+    return n_experts * jnp.sum(me * ce)
+
+
+def moe_dispatch_combine(x, w_gate, w_up, w_down, router_w, *, top_k: int,
+                         capacity_factor: float, act: str = "silu",
+                         capacity: Optional[int] = None):
+    """Capacity-based MoE layer over flattened tokens.
+
+    x: (T, d); expert weights: (E, d, f)/(E, f, d); router_w: (d, E).
+    Returns (out (T, d), aux_loss scalar).
+    """
+    T, d = x.shape
+    E = w_gate.shape[0]
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    weights, idx = router_topk(logits, top_k)            # (T, k)
+    C = capacity or max(1, int(math.ceil(capacity_factor * top_k * T / E)))
+
+    # position of each (token, slot) within its expert: prefix sum of one-hots
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)     # (T, k, E)
+    flat_oh = onehot.reshape(T * top_k, E)
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh          # (T*k, E)
+    pos_in_e = (pos * flat_oh).sum(-1).reshape(T, top_k)  # (T, k)
+    keep = pos_in_e < C
+    slot = idx * C + jnp.minimum(pos_in_e, C - 1)        # (T, k) in [0, E*C)
+
+    # scatter tokens into expert buffers (dropped tokens contribute nothing)
+    buf = jnp.zeros((E * C, d), x.dtype)
+    upd = jnp.where(keep[..., None], x[:, None, :], 0).reshape(T * top_k, d)
+    buf = buf.at[slot.reshape(-1)].add(upd.astype(x.dtype),
+                                       mode="drop",
+                                       indices_are_sorted=False)
+    buf = constrain(buf.reshape(E, C, d), "expert_buf")   # EP all-to-all
+
+    # batched expert MLP
+    if act == "silu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, w_up)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, w_up))
+    h = constrain(h, "expert_hidden")
+    out_buf = constrain(jnp.einsum("ecf,efd->ecd", h, w_down),
+                        "expert_buf").reshape(E * C, d)
+
+    # gather back with routing weights
+    gathered = out_buf[slot.reshape(-1)].reshape(T, top_k, d)
+    wk = jnp.where(keep, weights, 0.0).astype(x.dtype)
+    out = constrain(jnp.einsum("tk,tkd->td", wk, gathered), "tokens2d")
+    aux = aux_load_balance_loss(logits, idx, E)
+    return out, aux
+
+
+def moe_dispatch_combine_grouped(x, w_gate, w_up, w_down, router_w, *,
+                                 top_k: int, capacity_factor: float,
+                                 groups: int, act: str = "silu"):
+    """GShard-style locally-grouped dispatch (the EP all-to-all form).
+
+    Tokens are split into ``groups`` (aligned with the DP shards via the
+    ``expert_buf_g`` activation rule); the position-in-expert prefix sum is
+    LOCAL to a group, so no cross-group order dependence exists and the
+    group->expert buffer exchange lowers to an all-to-all over the data
+    axis instead of full-buffer all-reduces.  Per-group capacity keeps the
+    total capacity identical to the global formulation.
+    """
+    T, d = x.shape
+    E = w_gate.shape[0]
+    G = groups
+    Tl = T // G
+    xg = constrain(x.reshape(G, Tl, d), "moe_tokens_g")
+    logits = jnp.einsum("gtd,de->gte",
+                        xg.astype(jnp.float32), router_w.astype(jnp.float32))
+    weights, idx = router_topk(logits.reshape(G * Tl, E), top_k)
+    weights = weights.reshape(G, Tl, top_k)
+    idx = idx.reshape(G, Tl, top_k)
+    C = max(1, int(math.ceil(capacity_factor * top_k * Tl / E)))
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (G, Tl, k, E)
+    flat_oh = onehot.reshape(G, Tl * top_k, E)
+    pos = jnp.cumsum(flat_oh, axis=1) - flat_oh           # local prefix sum
+    pos_in_e = (pos * flat_oh).sum(-1).reshape(G, Tl, top_k)
+    keep = pos_in_e < C
+    slot = idx * C + jnp.minimum(pos_in_e, C - 1)         # (G, Tl, k)
+
+    upd = jnp.where(keep[..., None], xg[:, :, None, :], 0) \
+        .reshape(G, Tl * top_k, d).astype(x.dtype)
+
+    def scatter_one(s, u):
+        return jnp.zeros((E * C, d), x.dtype).at[s].add(
+            u, mode="drop", indices_are_sorted=False)
+
+    buf = jax.vmap(scatter_one)(slot.reshape(G, Tl * top_k), upd)
+    buf = constrain(buf.reshape(G, E, C, d), "expert_buf_g")
+
+    if act == "silu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, w_gate))
+        h = h * jnp.einsum("gecd,edf->gecf", buf, w_up)
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, w_up))
+    h = constrain(h, "expert_hidden_g")
+    out_buf = constrain(jnp.einsum("gecf,efd->gecd", h, w_down),
+                        "expert_buf_g").reshape(G, E * C, d)
+
+    gathered = jax.vmap(lambda b, s: b[s])(
+        out_buf, slot.reshape(G, Tl * top_k)).reshape(G, Tl, top_k, d)
+    # NOTE(§Perf, refuted): constraining `gathered` to a d-sharded layout
+    # (P(dp, None, None, tp)) to turn the combine all-reduce into a
+    # reduce-scatter was tried and REGRESSED t_collective 8.6s -> 10.3s on
+    # deepseek-moe train_4k — XLA inserts extra reshards of out_buf around
+    # the gather.  Kept on the default (all-reduce) path.
+    wk = jnp.where(keep, weights, 0.0).astype(x.dtype)
+    out = jnp.einsum("gtk,gtkd->gtd", wk, gathered)
+    out = constrain(out, "moe_tokens_g").reshape(T, d)
+    aux = aux_load_balance_loss(logits.reshape(G * Tl, E),
+                                idx.reshape(G * Tl, top_k), E)
+    return out, aux
+
+
+def moe_block(x, p, cfg):
+    """Full MoE sub-block for one layer (pre-sliced params).
+
+    x: (B, S, d) -> (out, aux_loss)
+    """
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    groups = getattr(cfg, "moe_groups", 1) or 1
+    if groups > 1 and (B * S) % groups == 0:
+        out, aux = moe_dispatch_combine_grouped(
+            xf, p["we_gate"], p["we_up"], p["we_down"], p["router"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            groups=groups, act=cfg.mlp_act)
+    else:
+        out, aux = moe_dispatch_combine(
+            xf, p["we_gate"], p["we_up"], p["we_down"],
+            p["router"], top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, act=cfg.mlp_act)
+    if cfg.n_shared_experts:
+        h = jax.nn.silu(xf @ p["ws_gate"]) * (xf @ p["ws_up"])
+        out = out + h @ p["ws_down"]
+    if cfg.dense_residual:
+        out = out + mlp(xf, p["dense"], None, cfg.mlp_act)
+    return out.reshape(B, S, d), aux

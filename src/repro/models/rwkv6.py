@@ -1,0 +1,156 @@
+"""RWKV-6 "Finch": linear attention with data-dependent per-channel decay.
+
+Training uses a chunked formulation (the jnp oracle of the
+`kernels/rwkv6` Pallas kernel): within a chunk the per-channel decay
+exponents are all non-positive, so every exp() is numerically safe; the
+inter-chunk state is carried through a `lax.scan`.  Decode is the O(1)
+sequential recurrence — the reason the 500k-context cell is feasible for
+this family at all.
+
+Recurrence (per head, state S in R^{K x V}):
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(ww x_t + b)) in (0, 1) data-dependent.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+LOG_W_MIN = -8.0     # clamp per-token log-decay for numerical safety
+
+
+def _proj_rkvwg(x, x_prev, p):
+    """Token-shift mixes + five projections.  x: (B, S, d)."""
+    sel = lambda w: w
+    mix = jax.nn.sigmoid(sel(p["mix"]))                   # (5, d)
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    def mixed(i):
+        return x * mix[i] + xs * (1.0 - mix[i])
+    r = mixed(0) @ sel(p["wr"])
+    k = mixed(1) @ sel(p["wk"])
+    v = mixed(2) @ sel(p["wv"])
+    lw = mixed(3) @ sel(p["ww"]) + sel(p["w_bias"])
+    g = jax.nn.silu(mixed(4) @ sel(p["wg"]))
+    log_w = -jnp.exp(lw.astype(jnp.float32))              # <= 0
+    log_w = jnp.maximum(log_w, LOG_W_MIN)
+    return r, k, v, log_w, g
+
+
+def wkv6_chunked(r, k, v, log_w, u, chunk: int = 32):
+    """Chunked WKV6.  r,k,v,log_w: (B, S, H, K); u: (H, K).
+
+    Returns (B, S, H, K) outputs (head value dim == K here).
+    """
+    B, S, H, K = r.shape
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    def padc(x):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rc = padc(r).reshape(B, n, chunk, H, K).astype(jnp.float32)
+    kc = padc(k).reshape(B, n, chunk, H, K).astype(jnp.float32)
+    vc = padc(v).reshape(B, n, chunk, H, K).astype(jnp.float32)
+    lw = padc(log_w).reshape(B, n, chunk, H, K)
+
+    def chunk_step(state, blk):
+        rb, kb, vb, lwb = blk                             # (B, L, H, K)
+        cum = jnp.cumsum(lwb, axis=1)                     # inclusive
+        cum_ex = cum - lwb                                # exclusive
+        # state contribution: r'_t = r_t * exp(cum_ex[t])  (exponent <= 0)
+        r_dec = rb * jnp.exp(cum_ex)
+        o_state = jnp.einsum("blhk,bhkv->blhv", r_dec, state)
+        # intra-chunk: A[t,i] = sum_d r[t,d] k[i,d] exp(cum_ex[t,d]-cum[i,d])
+        expo = cum_ex[:, :, None] - cum[:, None, :, :, :]  # (B, L, L, H, K) <=0 for i<t
+        L = rb.shape[1]
+        tri = jnp.tril(jnp.ones((L, L), bool), -1)
+        expo = jnp.where(tri[None, :, :, None, None], expo, -jnp.inf)
+        a = jnp.einsum("bthk,bihk,btihk->btih", rb, kb, jnp.exp(expo))
+        # diagonal bonus term
+        diag = jnp.einsum("bthk,hk,bthk->bth", rb, u.astype(jnp.float32), kb)
+        o_intra = jnp.einsum("btih,bihv->bthv", a, vb)
+        o_diag = diag[..., None] * vb
+        # state update: S' = diag(exp(cum[-1])) S + sum_i exp(cum[-1]-cum[i]) k_i v_i^T
+        decay_all = jnp.exp(cum[:, -1])                   # (B, H, K)
+        k_dec = kb * jnp.exp(cum[:, -1:, :, :] - cum)     # exponent <= 0
+        state_new = state * decay_all[..., None] + jnp.einsum(
+            "bihk,bihv->bhkv", k_dec, vb)
+        return state_new, o_state + o_intra + o_diag
+
+    init = jnp.zeros((B, H, K, K), jnp.float32)
+    blks = tuple(jnp.moveaxis(x, 1, 0) for x in (rc, kc, vc, lw))
+    _, outs = jax.lax.scan(jax.checkpoint(chunk_step, prevent_cse=False),
+                           init, blks)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n * chunk, H, K)
+    return out[:, :S].astype(r.dtype)
+
+
+def rwkv6_layer(x, x_prev_tmix, x_prev_cmix, p, cfg):
+    """One RWKV6 block: time mix + channel mix.  x: (B, S, d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    K = d // H
+    h = rms_norm(x, p["norm1"])
+    r, k, v, log_w, g = _proj_rkvwg(h, x_prev_tmix, p)
+    rr = r.reshape(B, S, H, K)
+    kk = k.reshape(B, S, H, K)
+    vv = v.reshape(B, S, H, K)
+    ww = log_w.reshape(B, S, H, K)
+    u = p["u"].reshape(H, K)
+    o = wkv6_chunked(rr, kk, vv, ww, u).reshape(B, S, d)
+    o = rms_norm(o, p["ln_x"]) * g
+    x = x + o @ p["wo"]
+    # channel mix (rwkv ffn): square-relu with receptance gate
+    h2 = rms_norm(x, p["norm2"])
+    h2s = jnp.concatenate([x_prev_cmix[:, None, :], h2[:, :-1, :]], axis=1)
+    kk2 = jnp.square(jax.nn.relu(h2 @ p["ffn_k"]))
+    rr2 = jax.nn.sigmoid(h2s @ p["ffn_r"])
+    x = x + rr2 * (kk2 @ p["ffn_v"])
+    return x, h[:, -1, :], h2[:, -1, :]
+
+
+def rwkv6_decode_step(x, tmix_state, cmix_state, wkv_state, p, cfg):
+    """One-token decode.  x: (B, d); wkv_state: (B, H, K, K)."""
+    B, d = x.shape
+    H = cfg.n_heads
+    K = d // H
+    h = rms_norm(x, p["norm1"])
+    r, k, v, log_w, g = _proj_rkvwg(h[:, None, :], tmix_state, p)
+    rr = r.reshape(B, H, K).astype(jnp.float32)
+    kk = k.reshape(B, H, K).astype(jnp.float32)
+    vv = v.reshape(B, H, K).astype(jnp.float32)
+    w = jnp.exp(log_w.reshape(B, H, K))
+    u = p["u"].reshape(H, K).astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kk, vv)
+    o = jnp.einsum("bhk,bhkv->bhv", rr, wkv_state + u[None, :, :, None] * kv)
+    wkv_state = wkv_state * w[..., None] + kv
+    o = o.reshape(B, 1, d).astype(x.dtype)
+    o = rms_norm(o, p["ln_x"]) * g
+    x = x + (o @ p["wo"])[:, 0]
+    h2 = rms_norm(x, p["norm2"])
+    kk2 = jnp.square(jax.nn.relu(h2 @ p["ffn_k"]))
+    rr2 = jax.nn.sigmoid(cmix_state @ p["ffn_r"])
+    x = x + rr2 * (kk2 @ p["ffn_v"])
+    return x, h, h2, wkv_state
+
+
+def wkv6_sequential(r, k, v, log_w, u):
+    """Sequential oracle for tests (token-by-token recurrence)."""
+    B, S, H, K = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], w[:, t]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt,
+                       state + uf[None, :, :, None] * kv)
+        return state * wt[..., None] + kv, o
+
+    _, outs = jax.lax.scan(step, jnp.zeros((B, H, K, K), jnp.float32),
+                           jnp.arange(S))
+    return jnp.moveaxis(outs, 0, 1)

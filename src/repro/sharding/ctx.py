@@ -1,0 +1,78 @@
+"""Activation-sharding context: lets the (sharding-agnostic) model code
+drop `with_sharding_constraint`s that the step builders configure.
+
+Without explicit activation constraints XLA's SPMD propagation is free to
+pick pathological layouts (e.g. replicating the batch dim and sharding
+d_model across the FSDP axis), which wrecks both memory and collective
+behavior — constraining `hidden` / `logits` / expert buffers pins the
+intended DP x TP program.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: contextvars.ContextVar[Optional[Dict[str, NamedSharding]]] = \
+    contextvars.ContextVar("activation_rules", default=None)
+
+
+def make_rules(mesh: Mesh, batch_sharded: bool = True,
+               strategy: str = "tp2d",
+               kv_tp_ok: bool = True) -> Dict[str, NamedSharding]:
+    from repro.sharding.specs import dp_axes, mesh_axis
+    dp = dp_axes(mesh, strategy)
+    tp = mesh_axis(mesh, "model") if strategy != "fsdp" else None
+    if batch_sharded:
+        hidden = P(dp, None, None)
+        tokens2d = P(dp, None)
+        logits = P(dp, None, tp)
+        qkv = P(dp, None, tp, None)
+    else:                       # sequence-parallel fallback (batch too small)
+        hidden = P(None, dp, None)
+        tokens2d = P(dp, None)          # flattened tokens still shard dim 0
+        logits = P(None, dp, tp)
+        qkv = P(None, dp, tp, None)
+    rules = {
+        "hidden": hidden,
+        "logits": logits,
+        "qkv": qkv,
+        "tokens2d": tokens2d,
+        "expert_buf": P(tp, None, None),       # (E, C, d): experts over TP
+        "expert_hidden": P(tp, None, None),    # (E, C, f)
+        # grouped (GShard-style) dispatch: groups align with the DP shards,
+        # experts with TP — the group<->expert reshard is the EP all-to-all
+        "moe_tokens_g": P(dp, None, None),     # (G, Tl, d)
+        "expert_buf_g": P(dp, tp, None, None),     # (G, E, C, d)
+        "expert_hidden_g": P(dp, tp, None, None),  # (G, E, C, f)
+        # whole-head attention sharding (attn_head_shard="heads"): q heads
+        # over TP (GSPMD pads ragged head counts); kv heads replicate when
+        # kv_heads % tp != 0 so scores never reduce across devices
+        "moe_gathered": P(dp, None, None, tp),     # (G, Tl, k, d/tp)
+        "q_heads": P(dp if batch_sharded else None, None, tp, None),
+        "kv_heads": P(dp if batch_sharded else None, None,
+                      tp if kv_tp_ok else None, None),
+    }
+    return {k: NamedSharding(mesh, v) for k, v in rules.items()}
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: Optional[Dict[str, NamedSharding]]):
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def constrain(x, kind: str):
+    rules = _RULES.get()
+    if rules is None or kind not in rules:
+        return x
+    sh = rules[kind]
+    if x.ndim != len(sh.spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,238 @@
+"""Sharding rules: logical axes -> PartitionSpec over the (pod, data, model)
+mesh.
+
+Parallelism layout (MaxText-style, generalizes to any axis sizes):
+
+  * DP   — batch over ('pod', 'data') (pods compose with the data axis)
+  * FSDP — parameter d_model/reduction dims over 'data' (ZeRO-3: optimizer
+           state inherits the param specs, so it is fully sharded too)
+  * TP   — heads / ffn / vocab / experts over 'model' (Megatron pairs:
+           column-parallel then row-parallel, one all-reduce per block)
+  * EP   — MoE expert dim over 'model'; dispatch scatter = the all-to-all
+  * SP   — long-context cells shard sequence over ('pod', 'data') when the
+           batch axis is too small (e.g. long_500k with batch 1), and the
+           decode KV cache over 'model' when kv_heads < model-axis size
+           (flash-decode style partial-softmax combine, inserted by XLA)
+
+Nothing here hard-codes axis sizes; scaling to 1000+ nodes only grows the
+'pod'/'data' axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def mesh_axis(mesh: Mesh, name: str) -> Optional[str]:
+    return name if name in mesh.axis_names else None
+
+
+def dp_axes(mesh: Mesh, strategy: str = "tp2d"):
+    """Composite DP axis.
+
+    tp2d: ('pod', 'data') — the model axis is reserved for TP/EP.
+    fsdp: ('data', 'model') — batch over the whole pod; the pod axis stays
+    pure (possibly redundant) DP so a fixed global batch still lowers on
+    the 2-pod mesh (at real scale the batch would grow with pods).
+    """
+    if strategy == "fsdp":
+        axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    else:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def fsdp_weight_axes(mesh: Mesh):
+    """Combined weight-shard axes for the pure-FSDP (ZeRO-3) strategy."""
+    axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpec pytree matching ``init_params(cfg)``'s structure."""
+    if cfg.shard_strategy == "fsdp":
+        fsdp = fsdp_weight_axes(mesh)      # weights over (data x model)
+        tp = None                          # no tensor parallelism
+    else:
+        fsdp = mesh_axis(mesh, "data")
+        tp = mesh_axis(mesh, "model")
+
+    # whole-head mode: keep KV projections off the TP axis when kv heads
+    # don't divide it (their activations replicate; weights follow)
+    kv_tp = tp
+    if (tp is not None and cfg.attn_head_shard == "heads"
+            and cfg.kv_heads % mesh.shape[tp] != 0):
+        kv_tp = None
+
+    def attn_specs():
+        s = {
+            "wq": P(None, fsdp, tp),
+            "wk": P(None, fsdp, kv_tp),
+            "wv": P(None, fsdp, kv_tp),
+            "wo": P(None, tp, fsdp),
+        }
+        if cfg.qk_norm:
+            s["q_norm"] = P(None, None)
+            s["k_norm"] = P(None, None)
+        return s
+
+    def mlp_specs():
+        s = {"w_up": P(None, fsdp, tp), "w_down": P(None, tp, fsdp)}
+        if cfg.mlp_act == "silu":
+            s["w_gate"] = P(None, fsdp, tp)
+        return s
+
+    specs: Dict[str, Any] = {
+        "embed": P(tp, fsdp),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(fsdp, tp)
+    if cfg.family in ("dense", "hubert", "paligemma"):
+        specs.update(attn=attn_specs(), mlp=mlp_specs(),
+                     norm1=P(None, None), norm2=P(None, None))
+    elif cfg.family == "moe":
+        moe = {
+            "router": P(None, fsdp, None),
+            "we_gate": P(None, tp, fsdp, None),
+            "we_up": P(None, tp, fsdp, None),
+            "we_down": P(None, tp, None, fsdp),
+        }
+        if cfg.n_shared_experts:
+            moe.update(ws_gate=P(None, fsdp, tp), ws_up=P(None, fsdp, tp),
+                       ws_down=P(None, tp, fsdp))
+        if cfg.dense_residual:
+            moe["dense"] = mlp_specs()
+        specs.update(attn=attn_specs(), moe=moe,
+                     norm1=P(None, None), norm2=P(None, None))
+    elif cfg.family == "rwkv6":
+        specs["rwkv"] = {
+            "mix": P(None, None, None),
+            "wr": P(None, fsdp, tp), "wk": P(None, fsdp, tp),
+            "wv": P(None, fsdp, tp), "wg": P(None, fsdp, tp),
+            "ww": P(None, fsdp, tp),
+            "w_bias": P(None, tp), "u": P(None, tp),
+            "wo": P(None, tp, fsdp), "ln_x": P(None, tp),
+            "ffn_k": P(None, fsdp, tp), "ffn_v": P(None, tp, fsdp),
+            "ffn_r": P(None, fsdp, tp),
+            "norm1": P(None, None), "norm2": P(None, None),
+        }
+    elif cfg.family == "zamba2":
+        specs["mamba"] = {
+            "w_in": P(None, fsdp, tp),
+            "conv_w": P(None, None, tp),
+            "A_log": P(None, None), "D": P(None, None),
+            "dt_bias": P(None, None),
+            "w_out": P(None, tp, fsdp),
+            "norm": P(None, None), "gate_norm": P(None, tp),
+        }
+        specs["shared_attn"] = attn_specs()
+        specs["shared_mlp"] = mlp_specs()
+        specs["shared_norm1"] = P(None, None)
+        specs["shared_norm2"] = P(None, None)
+    if cfg.frontend == "audio":
+        specs["frontend_proj"] = P(fsdp, tp)
+        specs["mask_embed"] = P(None)
+    if cfg.frontend == "image":
+        specs["img_proj"] = P(fsdp, tp)
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                kind: str) -> Dict[str, Any]:
+    """Input-batch PartitionSpecs; batch over DP if divisible else seq."""
+    dp = dp_axes(mesh, cfg.shard_strategy)
+    dp_size = 1
+    if dp:
+        for a in dp:
+            dp_size *= mesh.shape[a]
+    batch_ok = dp and (global_batch % dp_size == 0) and global_batch >= dp_size
+    bspec = dp if batch_ok else None
+    sspec = None if batch_ok else dp            # sequence-parallel fallback
+    if cfg.family == "hubert":
+        return {"features": P(bspec, sspec, None),
+                "mask": P(bspec, sspec), "targets": P(bspec, sspec)}
+    out = {"tokens": P(bspec, sspec)}
+    if cfg.family == "paligemma":
+        out["img_embeds"] = P(bspec, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Dict[str, Any]:
+    """Decode-cache PartitionSpecs (see module docstring for the policy)."""
+    dp = dp_axes(mesh, cfg.shard_strategy)
+    tp = (mesh_axis(mesh, "model") if cfg.shard_strategy != "fsdp" else None)
+    tp_size = mesh.shape[tp] if tp else 1
+    dp_size = 1
+    if dp:
+        for a in dp:
+            dp_size *= mesh.shape[a]
+    batch_ok = dp and (batch % dp_size == 0)
+    b = dp if batch_ok else None
+    # KV heads over model when divisible, else shard cache sequence (SP)
+    heads_ok = tp and (cfg.kv_heads % tp_size == 0)
+    kvh = tp if heads_ok else None
+    kvs = None if heads_ok else (tp if batch_ok else dp)
+    if not batch_ok and not heads_ok:
+        kvs = dp          # batch=1 & few kv heads: SP over the big DP axis
+    if cfg.family in ("dense", "moe", "paligemma"):
+        return {"k": P(None, b, kvs, kvh, None),
+                "v": P(None, b, kvs, kvh, None), "len": P()}
+    if cfg.family == "rwkv6":
+        return {"wkv": P(None, b, tp, None, None),
+                "tmix": P(None, b, None), "cmix": P(None, b, None),
+                "len": P()}
+    if cfg.family == "zamba2":
+        return {"conv": P(None, b, None, tp),
+                "ssm": P(None, b, tp, None, None),
+                "k": P(None, b, kvs, kvh, None),
+                "v": P(None, b, kvs, kvh, None), "len": P()}
+    raise ValueError(cfg.family)
+
+
+def activation_spec(mesh: Mesh, global_batch: int) -> P:
+    dp = dp_axes(mesh)
+    dp_size = 1
+    if dp:
+        for a in dp:
+            dp_size *= mesh.shape[a]
+    if dp and global_batch % dp_size == 0 and global_batch >= dp_size:
+        return P(dp, None, None)
+    return P(None, dp, None)
+
+
+def to_shardings(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_specs(tree_specs, tree_shapes, mesh: Mesh):
+    """Shape-aware spec cleanup: pad each PartitionSpec to the leaf's full
+    rank and drop mesh axes from any dimension they don't divide evenly
+    (XLA requires divisibility for explicit in/out shardings).  Keeps the
+    sharding rules declarative while staying correct for odd sizes such as
+    hubert's 504-entry codebook embedding."""
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        shape = leaf.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        return P(*(ax if dim % _axes_size(mesh, ax) == 0 else None
+                   for dim, ax in zip(shape, entries)))
+    return jax.tree.map(fix, tree_specs, tree_shapes,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,141 @@
+"""Jitted, sharded train step with microbatch gradient accumulation.
+
+`make_train_step` builds a pjit-ed function with explicit in/out shardings
+derived from `repro.sharding.specs`.  Gradient accumulation is a lax.scan
+over microbatches — the backward all-reduce of microbatch i overlaps with
+the forward of microbatch i+1 in XLA's schedule, which is the standard
+compute/communication overlap trick at scale.  Optional error-feedback
+int8 gradient compression sits on the DP all-reduce path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig, init_params
+from repro.models.lm import lm_loss
+from repro.sharding.ctx import activation_sharding, make_rules
+from repro.sharding.specs import (activation_spec, batch_specs, dp_axes,
+                                  param_specs, sanitize_specs, to_shardings)
+from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                   opt_state_specs)
+
+
+def compress_grads_int8(grads, err_state):
+    """Error-feedback int8 quantization (applied before the DP all-reduce)."""
+    def q(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.abs(g).max(), 1e-8) / 127.0
+        qg = jnp.clip(jnp.round(g / scale), -127, 127)
+        deq = qg * scale
+        return deq.astype(g.dtype), (g - deq)
+    out = jax.tree.map(q, grads, err_state)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+def make_loss_and_grad(cfg: ModelConfig, n_microbatches: int = 1):
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    if n_microbatches <= 1:
+        def total_grad(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        return total_grad
+
+    def total_grad(params, batch):
+        def reshape_mb(x):
+            return x.reshape(n_microbatches, x.shape[0] // n_microbatches,
+                             *x.shape[1:])
+        mb = jax.tree.map(reshape_mb, batch)
+
+        def step(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), metrics = jax.lax.scan(step, (zeros, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / n_microbatches, metrics, grads
+    return total_grad
+
+
+def train_step_fn(cfg: ModelConfig, opt: OptConfig, n_microbatches: int = 1,
+                  compress: bool = False, grad_shardings=None):
+    total_grad = make_loss_and_grad(cfg, n_microbatches)
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = total_grad(params, batch)
+        if grad_shardings is not None:
+            # Pin gradients to the parameter shardings *before* the optimizer
+            # consumes them: under FSDP this makes XLA emit reduce-scatter
+            # (each device only materializes its shard) instead of the
+            # all-reduce + slice it otherwise falls back to — half the wire
+            # bytes and 1/N the gradient memory.
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                                 grad_shardings)
+        if compress:
+            grads, err = compress_grads_int8(grads, opt_state["err"])
+        params, inner, opt_metrics = adamw_update(
+            params, grads, opt_state["opt"], opt)
+        new_state = {"opt": inner}
+        if compress:
+            new_state["err"] = err
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return params, new_state, metrics
+    return step
+
+
+def make_train_state(cfg: ModelConfig, opt: OptConfig, params,
+                     compress: bool = False):
+    state = {"opt": init_opt_state(params, opt)}
+    if compress:
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def make_sharded_train_step(cfg: ModelConfig, opt: OptConfig, mesh: Mesh,
+                            global_batch: int, n_microbatches: int = 1,
+                            compress: bool = False):
+    """pjit-ed train step with explicit in/out shardings (dry-run entry)."""
+    abstract = jax.eval_shape(lambda k: init_params(k, cfg),
+                              jax.random.PRNGKey(0))
+    p_specs = sanitize_specs(param_specs(cfg, mesh), abstract, mesh)
+    o_specs = {"opt": opt_state_specs(p_specs, opt, abstract)}
+    if compress:
+        o_specs["err"] = p_specs
+    b_specs = batch_specs(cfg, mesh, global_batch, "train")
+    dp_size = 1
+    for a in (dp_axes(mesh, cfg.shard_strategy) or ()):
+        dp_size *= mesh.shape[a]
+    kv_tp_ok = ("model" not in mesh.axis_names
+                or cfg.kv_heads % mesh.shape["model"] == 0)
+    rules = make_rules(mesh, batch_sharded=(global_batch % dp_size == 0
+                                            and global_batch >= dp_size),
+                       strategy=cfg.shard_strategy, kv_tp_ok=kv_tp_ok)
+    inner_step = train_step_fn(
+        cfg, opt, n_microbatches, compress,
+        grad_shardings=(to_shardings(p_specs, mesh)
+                        if cfg.grad_reduce == "pinned" else None))
+
+    def step(params, opt_state, batch):
+        with activation_sharding(rules):
+            return inner_step(params, opt_state, batch)
+    in_shardings = (to_shardings(p_specs, mesh), to_shardings(o_specs, mesh),
+                    to_shardings(b_specs, mesh))
+    out_shardings = (to_shardings(p_specs, mesh), to_shardings(o_specs, mesh),
+                     None)
+    return jax.jit(step, in_shardings=in_shardings,
+                   out_shardings=out_shardings), (p_specs, o_specs, b_specs)

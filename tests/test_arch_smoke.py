@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness, plus a decode step where applicable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, FAMILIES, smoke_config
+from repro.models.common import init_params, param_bytes
+from repro.models.lm import decode_step, forward, init_cache, lm_loss
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def make_batch(cfg, B=2, S=16, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    if cfg.family == "hubert":
+        return {
+            "features": jnp.array(rng.normal(size=(B, S, cfg.d_model)),
+                                  jnp.float32),
+            "mask": jnp.array(rng.random((B, S)) < 0.3),
+            "targets": jnp.array(rng.integers(0, cfg.vocab, (B, S)),
+                                 jnp.int32),
+        }
+    batch = {"tokens": jnp.array(rng.integers(0, cfg.vocab, (B, S)),
+                                 jnp.int32)}
+    if cfg.family == "paligemma":
+        batch["img_embeds"] = jnp.array(
+            rng.normal(size=(B, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    if cfg.family == "hubert":
+        logits, aux = forward(params, cfg, features=batch["features"],
+                              feat_mask=batch["mask"])
+    else:
+        logits, aux = forward(params, cfg, batch["tokens"],
+                              img_embeds=batch.get("img_embeds"))
+    B, S = (batch.get("tokens") if "tokens" in batch
+            else batch["features"][..., 0]).shape
+    assert logits.shape == (B, S, cfg.vocab)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all(), "NaN/Inf in logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_reduces_loss_direction(arch):
+    """One SGD step on the smoke config: loss finite, grads finite."""
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    batch = make_batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+        params, cfg, batch)
+    assert jnp.isfinite(loss), f"loss={loss}"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+    # apply and re-evaluate: loss should change (params are connected)
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype),
+                           params, grads)
+    loss2, _ = lm_loss(params2, cfg, batch)
+    assert jnp.isfinite(loss2) and not jnp.allclose(loss, loss2)
+
+
+DECODE_ARCHS = [a for a in ARCH_NAMES if FAMILIES[a] != "hubert"
+                and FAMILIES[a] != "paligemma"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_step_matches_forward(arch):
+    """Greedy decode logits == teacher-forced forward logits."""
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 8
+    tokens = jnp.array(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full_logits, _ = forward(params, cfg, tokens)
+    cache = init_cache(cfg, B, max_len=S + 4)
+    outs = []
+    for t in range(S):
+        lg, cache = decode_step(params, cfg, cache, tokens[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits.astype(jnp.float32)),
+                               rtol=0.15, atol=0.05)
+
+
+def test_decode_cache_shapes():
+    cfg = smoke_config("zamba2-2.7b")
+    cache = init_cache(cfg, batch=2, max_len=32)
+    G = cfg.n_layers // cfg.shared_attn_every
+    assert cache["k"].shape[0] == G
+    assert cache["ssm"].shape[0] == cfg.n_layers

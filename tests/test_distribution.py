@@ -1,0 +1,149 @@
+"""Optimizer, data pipeline, checkpoint/restart, elastic restore,
+fault-tolerance supervisor, straggler monitor, sharding specs."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig, Prefetcher, host_batch
+from repro.models.common import init_params
+from repro.runtime.fault_tolerance import (FaultConfig, StragglerMonitor,
+                                           Supervisor, WorkerFailure)
+from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                   lr_schedule)
+
+
+def test_adamw_reduces_quadratic():
+    opt = OptConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                    weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params, opt)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(params, grads, state, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_factored_adam_matches_direction():
+    opt = OptConfig(lr=0.01, factored=True, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.ones((8, 4))}
+    state = init_opt_state(params, opt)
+    assert "v_row" in state["state"]["w"] and "v" not in state["state"]["w"]
+    grads = {"w": jnp.ones((8, 4))}
+    params2, state, _ = adamw_update(params, grads, state, opt)
+    assert (params2["w"] < params["w"]).all()
+
+
+def test_lr_schedule_warmup_and_decay():
+    opt = OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert lr_schedule(opt, 5) < lr_schedule(opt, 10)
+    assert lr_schedule(opt, 99) < lr_schedule(opt, 20)
+
+
+def test_data_determinism_across_host_counts():
+    cfg = smoke_config("qwen3-8b")
+    dc = DataConfig(global_batch=8, seq_len=16)
+    full = host_batch(cfg, dc, step=3, host_id=0, n_hosts=1)
+    h0 = host_batch(cfg, dc, step=3, host_id=0, n_hosts=2)
+    h1 = host_batch(cfg, dc, step=3, host_id=1, n_hosts=2)
+    np.testing.assert_array_equal(full["tokens"],
+                                  np.concatenate([h0["tokens"], h1["tokens"]]))
+
+
+def test_prefetcher_yields_sequential_steps():
+    cfg = smoke_config("qwen3-8b")
+    dc = DataConfig(global_batch=4, seq_len=8)
+    pf = Prefetcher(cfg, dc, start_step=7)
+    s0, b0 = next(pf)
+    s1, b1 = next(pf)
+    pf.close()
+    assert (s0, s1) == (7, 8)
+    np.testing.assert_array_equal(b0["tokens"],
+                                  host_batch(cfg, dc, 7)["tokens"])
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(6.0).reshape(2, 3), "n": {"b": jnp.ones(4)}}
+        for s in (10, 20, 30, 40):
+            save(d, s, tree, keep=2)
+        assert latest_step(d) == 40
+        assert len(os.listdir(d)) == 2          # gc keeps 2
+        restored, manifest = restore(d, jax.tree.map(jnp.zeros_like, tree))
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        assert manifest["step"] == 40
+
+
+def test_supervisor_restart_resumes_deterministically():
+    with tempfile.TemporaryDirectory() as d:
+        def make_state():
+            return {"x": jnp.zeros(3)}
+
+        def step_fn(state, step):
+            return {"x": state["x"] + 1.0}
+
+        cfg = FaultConfig(ckpt_dir=d, ckpt_every=2, max_restarts=3)
+        crashed = {"done": False}
+
+        def failure_hook(step):
+            if step == 5 and not crashed["done"]:
+                crashed["done"] = True
+                return WorkerFailure(1, "injected node failure")
+            return None
+
+        sup = Supervisor(cfg, make_state=make_state, step_fn=step_fn)
+        state = sup.run(8, failure_hook=failure_hook)
+        assert sup.restarts == 1
+        # restarted from step-4 checkpoint, continued to 8
+        np.testing.assert_allclose(np.asarray(state["x"]), 8.0)
+
+
+def test_straggler_monitor_flags_persistent_laggard():
+    m = StragglerMonitor(factor=2.0, strikes_to_fail=2)
+    assert m.observe(0, 1.0) is None
+    assert m.observe(0, 1.0) is None
+    assert m.observe(0, 5.0) == "straggler"
+    assert m.observe(0, 5.0) == "fail"
+
+
+def test_elastic_restore_onto_host_mesh():
+    """Restore a checkpoint with explicit shardings (resize-on-load path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": jnp.arange(8.0)}
+        save(d, 1, tree)
+        sh = {"w": NamedSharding(mesh, P("data"))}
+        restored, _ = restore(d, jax.tree.map(jnp.zeros_like, tree),
+                              shardings=sh)
+        np.testing.assert_array_equal(restored["w"], tree["w"])
+        assert restored["w"].sharding == sh["w"]
+
+
+def test_param_specs_cover_tree():
+    """Every param leaf has a matching PartitionSpec of equal rank."""
+    from jax.sharding import PartitionSpec
+    from repro.sharding.specs import param_specs
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    for arch in ("qwen3-8b", "deepseek-moe-16b", "rwkv6-1.6b", "zamba2-2.7b",
+                 "hubert-xlarge", "paligemma-3b", "arctic-480b"):
+        cfg = smoke_config(arch)
+        params = jax.eval_shape(lambda k, c=cfg: init_params(k, c),
+                                jax.random.PRNGKey(0))
+        specs = param_specs(cfg, mesh)
+        flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+        flat_s = {tuple(str(x) for x in path): s for path, s in
+                  jax.tree_util.tree_flatten_with_path(
+                      specs, is_leaf=lambda x: isinstance(x, PartitionSpec))[0]}
+        for path, leaf in flat_p:
+            key = tuple(str(x) for x in path)
+            assert key in flat_s, f"{arch}: no spec for {key}"
+            assert len(flat_s[key]) <= leaf.ndim, \
+                f"{arch}: spec rank > leaf rank at {key}"

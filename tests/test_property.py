@@ -1,0 +1,170 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The central invariant is Morpher's own correctness contract: for ANY
+loop-body DFG the flow  map -> emit config -> simulate  must agree
+bit-exactly with the DFG interpreter, and the Pallas cgra_exec kernel must
+agree with the simulator.  Hypothesis generates random DFGs (random ALU
+dags + loads/stores + optional recurrences) to hunt corner cases the fixed
+kernel library misses.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adl import hycube
+from repro.core.dfg import (DFGBuilder, apply_layout, flat_memory, interpret,
+                            plan_layout, unflatten_memory)
+from repro.core.mapper import compute_mii, map_dfg
+
+ALU2 = ("ADD", "SUB", "MUL", "AND", "OR", "XOR", "MIN", "MAX",
+        "CMPLT", "CMPGT")
+
+
+@st.composite
+def random_dfg(draw):
+    """A random loop body: loads, an ALU dag, optional recurrence, stores."""
+    b = DFGBuilder("prop")
+    n_in = draw(st.integers(1, 3))
+    N = 8
+    for j in range(n_in):
+        b.array(f"in{j}", N)
+    b.array("out", N, output=True)
+    i = b.counter()
+    vals = [b.load(f"in{j}", i) for j in range(n_in)]
+    use_rec = draw(st.booleans())
+    rec = None
+    if use_rec:
+        rec = b.recur(init=draw(st.integers(-4, 4)))
+        vals.append(rec)
+    n_ops = draw(st.integers(1, 6))
+    for _ in range(n_ops):
+        op = draw(st.sampled_from(ALU2))
+        a = vals[draw(st.integers(0, len(vals) - 1))]
+        use_const = draw(st.booleans())
+        if use_const:
+            v = b.op(op, a, const=draw(st.integers(-8, 8)))
+        else:
+            c = vals[draw(st.integers(0, len(vals) - 1))]
+            v = b.op(op, a, c)
+        vals.append(v)
+    result = vals[-1]
+    if use_rec:
+        # keep recurrence values bounded so MUL chains cannot overflow-diverge
+        bounded = b.op("MAX", b.op("MIN", result, 1 << 10), -(1 << 10))
+        b.bind(rec, bounded)
+        result = bounded
+    b.store("out", i, result)
+    return b.build()
+
+
+@settings(max_examples=12, deadline=None)
+@given(random_dfg(), st.integers(0, 3))
+def test_mapped_config_matches_interpreter(dfg, seed):
+    """map -> simulate == interpret, for arbitrary DFGs (bit-exact)."""
+    from repro.core.simulator import simulate
+    fab = hycube(4, 4)
+    layout = plan_layout(dfg)
+    laid = apply_layout(dfg, layout)
+    res = map_dfg(laid, fab, seed=seed, ii_max=24)
+    assert res.success, "mapper must map any small DFG within ii_max"
+    assert res.II >= compute_mii(laid, fab)
+    rng = np.random.default_rng(seed)
+    mem = {k: rng.integers(-50, 50, n).astype(np.int32)
+           for k, n in dfg.arrays.items() if k != "out"}
+    n_iters = 8
+    expect = interpret(dfg, mem, n_iters)
+    flat = flat_memory(layout, mem)
+    out, _ = simulate(res.config, flat, n_iters)
+    got = unflatten_memory(layout, out, dfg.arrays)
+    np.testing.assert_array_equal(got["out"], expect["out"])
+
+
+@settings(max_examples=6, deadline=None)
+@given(random_dfg())
+def test_pallas_kernel_matches_simulator(dfg):
+    """linked cgra_exec == cycle-accurate simulator, over a random batch."""
+    from repro.kernels.cgra_exec.ops import cgra_exec_op
+    from repro.kernels.cgra_exec.ref import cgra_exec_ref
+    fab = hycube(4, 4)
+    layout = plan_layout(dfg)
+    laid = apply_layout(dfg, layout)
+    res = map_dfg(laid, fab, seed=0, ii_max=24)
+    assert res.success
+    rng = np.random.default_rng(1)
+    mems = np.stack([
+        flat_memory(layout, {k: rng.integers(-50, 50, n).astype(np.int32)
+                             for k, n in dfg.arrays.items()})
+        for _ in range(2)])
+    got = cgra_exec_op(res.config, mems, 6)
+    want = cgra_exec_ref(res.config, mems, 6)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 16), st.integers(1, 3))
+def test_pipeline_schedules_always_valid(S, M, C):
+    from repro.core.pipeline_schedule import (gpipe, interleaved_1f1b,
+                                              one_f_one_b)
+    gpipe(S, M).verify()
+    one_f_one_b(S, M).verify()
+    interleaved_1f1b(S, M, n_chunks=C).verify()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=4),
+       st.integers(0, 100))
+def test_checkpoint_roundtrip_property(dims, seed):
+    import tempfile
+    import jax.numpy as jnp
+    from repro.checkpoint.checkpoint import restore, save
+    rng = np.random.default_rng(seed)
+    tree = {"a": {"w": jnp.asarray(rng.normal(size=tuple(dims)),
+                                   jnp.float32)},
+            "b": [jnp.asarray(rng.integers(0, 9, (3,)), jnp.int32),
+                  jnp.float32(seed)]}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, tree)
+        got, manifest = restore(d, tree)
+        assert manifest["step"] == 1
+        for x, y in zip(np.asarray(got["a"]["w"]).ravel(),
+                        np.asarray(tree["a"]["w"]).ravel()):
+            assert x == y
+        np.testing.assert_array_equal(got["b"][0], tree["b"][0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 50))
+def test_data_pipeline_host_invariance(n_hosts, step):
+    """Global batch content is invariant to how many hosts shard it."""
+    from repro.configs import smoke_config
+    from repro.data.pipeline import DataConfig, host_batch
+    cfg = smoke_config("qwen3-8b")
+    dc = DataConfig(global_batch=np.lcm.reduce([n_hosts, 2]) * 2, seq_len=8)
+    if dc.global_batch % n_hosts:
+        return
+    full = host_batch(cfg, dc, step, 0, 1)["tokens"]
+    parts = [host_batch(cfg, dc, step, h, n_hosts)["tokens"]
+             for h in range(n_hosts)]
+    np.testing.assert_array_equal(full, np.concatenate(parts))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.booleans())
+def test_opt_state_specs_match_state_structure(rows, cols, factored):
+    """Spec tree structure must match init_opt_state exactly (the arctic
+    dry-run bug class), for any mix of 1-D and 2-D params."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.train.optimizer import (OptConfig, init_opt_state,
+                                       opt_state_specs)
+    opt = OptConfig(factored=factored)
+    params = {"w": jnp.zeros((rows * 8, cols * 8)), "norm": jnp.zeros((8,))}
+    specs = {"w": P(None, None), "norm": P(None)}
+    state = init_opt_state(params, opt)
+    sspecs = opt_state_specs(specs, opt, params)
+    t1 = jax.tree_util.tree_structure(state)
+    t2 = jax.tree_util.tree_structure(
+        jax.tree.map(lambda s: 0, sspecs,
+                     is_leaf=lambda x: isinstance(x, P)))
+    assert t1 == t2
