@@ -10,29 +10,28 @@
 """
 from __future__ import annotations
 
-from repro.core.adl import pace
-from repro.core.dfg import apply_layout, plan_layout
+from repro import ual
 from repro.core.energy import (AREA_SPLIT_CGRA, AREA_SPLIT_SOC, POWER_SPLIT,
                                kernel_energy)
-from repro.core.kernel_lib import KERNELS
-from repro.core.mapper import map_dfg
 
 from benchmarks.common import fmt_table, save
 
 
 def run(seed: int = 0, verbose: bool = True) -> dict:
-    fab = pace()
+    target = ual.Target.from_name("pace", seed=seed)
     gating = {}
     for name in ("gemm", "dct", "nw"):
-        dfg, _, n_iters = KERNELS[name]()
-        laid = apply_layout(dfg, plan_layout(dfg))
-        res = map_dfg(laid, fab, seed=seed)
-        if not res.success:
+        program = ual.Program.from_kernel(name)
+        exe = ual.compile(program, target)
+        if not exe.success:
             continue
-        e_on = kernel_energy(res.config, n_iters, dynamic_gating=True)
-        e_off = kernel_energy(res.config, n_iters, dynamic_gating=False)
+        n_iters = program.n_iters
+        e_on = kernel_energy(exe.map_result.config, n_iters,
+                             dynamic_gating=True)
+        e_off = kernel_energy(exe.map_result.config, n_iters,
+                              dynamic_gating=False)
         gating[name] = {
-            "ii": res.II,
+            "ii": exe.II,
             "energy_gated_pj": e_on["total"],
             "energy_ungated_pj": e_off["total"],
             "savings_pct": (1 - e_on["total"] / e_off["total"]) * 100,

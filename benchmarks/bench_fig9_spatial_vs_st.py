@@ -10,10 +10,7 @@ saved by eliminating configuration memory).
 """
 from __future__ import annotations
 
-from repro.core.adl import hycube, spatial
-from repro.core.dfg import apply_layout, plan_layout
-from repro.core.kernel_lib import KERNELS
-from repro.core.mapper import map_dfg, spatial_ii
+from repro import ual
 
 from benchmarks.common import fmt_table, save
 
@@ -22,20 +19,21 @@ KERNEL_ORDER = PAPER_KERNELS + ("jax_poly",)
 
 
 def run(seed: int = 0, verbose: bool = True) -> dict:
-    fab_st = hycube(4, 4)
-    fab_sp = spatial(4, 4)
+    tgt_st = ual.Target.from_name("hycube", rows=4, cols=4, seed=seed,
+                                  max_restarts=12)
+    tgt_sp = ual.Target.from_name("spatial", rows=4, cols=4, seed=seed,
+                                  backend="interp")
     rows, data = [], {}
     for name in KERNEL_ORDER:
-        dfg, _, _ = KERNELS[name]()
-        layout = plan_layout(dfg)
-        laid = apply_layout(dfg, layout)
-        res = map_dfg(laid, fab_st, seed=seed, max_restarts=12)
-        ii_st = res.II if res.success else -1
-        ii_sp, n_parts = spatial_ii(laid, fab_sp)
-        data[name] = {"st_ii": ii_st, "spatial_ii": ii_sp,
-                      "spatial_subgraphs": n_parts,
-                      "nodes": len(dfg.nodes)}
-        rows.append([name, len(dfg.nodes), ii_st, ii_sp, n_parts])
+        program = ual.Program.from_kernel(name)
+        st = ual.compile(program, tgt_st)
+        sp = ual.compile(program, tgt_sp)
+        ii_st = st.II if st.success else -1
+        data[name] = {"st_ii": ii_st, "spatial_ii": sp.II,
+                      "spatial_subgraphs": sp.spatial_subgraphs,
+                      "nodes": len(program.dfg.nodes)}
+        rows.append([name, len(program.dfg.nodes), ii_st, sp.II,
+                     sp.spatial_subgraphs])
     # the paper's claim is over ITS benchmark set — all too large to fit
     # the array spatially; jax_poly (14 nodes, fits, recurrence-free) is
     # our addition and legitimately wins on a spatial fabric (reported,

@@ -8,19 +8,24 @@ reports II, MII, mapper wall time and the validation verdict.
 """
 from __future__ import annotations
 
-from repro.core.adl import hycube, n2n
+from repro import ual
 from repro.core.kernel_lib import KERNELS
-from repro.core.validate import validate_kernel
 
 from benchmarks.common import fmt_table, save
 
 
 def run(seed: int = 0, verbose: bool = True) -> dict:
     rows, data = [], {}
-    for fab_name, fab in (("hycube4x4", hycube(4, 4)), ("n2n4x4", n2n(4, 4))):
-        for name, make in KERNELS.items():
-            dfg, mk, n_iters = make()
-            rep = validate_kernel(dfg, mk, n_iters, fab, seed=seed)
+    targets = (("hycube4x4", ual.Target.from_name("hycube", rows=4, cols=4,
+                                                  seed=seed)),
+               ("n2n4x4", ual.Target.from_name("n2n", rows=4, cols=4,
+                                               seed=seed)))
+    for fab_name, target in targets:
+        for name in KERNELS:
+            program = ual.Program.from_kernel(
+                name, n_banks=target.fabric.n_mem_ports)
+            exe = ual.compile(program, target)
+            rep = exe.validate(seed=seed)
             key = f"{name}@{fab_name}"
             data[key] = {
                 "passed": rep.passed, "ii": rep.map_result.II,
@@ -28,6 +33,7 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
                 "wall_s": round(rep.map_result.wall_s, 2),
                 "fu_util": round(rep.map_result.fu_util, 3),
                 "mismatches": rep.mismatches,
+                "cache_hit": exe.compile_info.cache_hit,
             }
             rows.append([key, rep.map_result.II, rep.map_result.mii,
                          data[key]["wall_s"], data[key]["fu_util"],

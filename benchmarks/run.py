@@ -1,21 +1,27 @@
 """Benchmark harness entry: one bench per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
 Each bench prints its table, records artifacts/bench/<name>.json, and
 returns machine-checkable claim booleans; the run fails (exit 1) if any
 paper claim is violated.
+
+``--smoke`` skips the full benches and instead compiles one kernel per
+registered temporal fabric through the UAL, cache-cold then cache-warm —
+a fast regression gate for the toolchain + mapping cache (used by CI).
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import tempfile
 import time
 
 from benchmarks import (bench_fig9_spatial_vs_st, bench_fig10_voltage,
                         bench_fig11_breakdown, bench_roofline,
                         bench_table2_validation, bench_table3_multihop,
                         bench_table4_efficiency)
+from benchmarks.common import fmt_table
 
 BENCHES = {
     "table2_validation": bench_table2_validation.run,
@@ -27,11 +33,78 @@ BENCHES = {
     "roofline": bench_roofline.run,
 }
 
+SMOKE_TARGETS = (
+    ("hycube", dict(rows=4, cols=4)),
+    ("n2n", dict(rows=4, cols=4)),
+    ("pace", {}),
+    ("spatial", dict(rows=4, cols=4)),
+)
+SMOKE_KERNEL = "gemm"
+
+
+def smoke() -> int:
+    """Compile one kernel per fabric, cold then warm; validate on sim.
+
+    Exit non-zero if any compile fails, any validation mismatches, or the
+    warm compile misses the cache.
+    """
+    import numpy as np
+
+    from repro import ual
+    failures = []
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        cache = ual.MappingCache(disk_dir=d)
+        for fab_name, kwargs in SMOKE_TARGETS:
+            spatial = fab_name == "spatial"
+            target = ual.Target.from_name(
+                fab_name, backend="interp" if spatial else "sim", **kwargs)
+            program = ual.Program.from_kernel(
+                SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports)
+            t0 = time.time()
+            exe = ual.compile(program, target, cache=cache)
+            t_cold = time.time() - t0
+            t0 = time.time()
+            warm = ual.compile(program, target, cache=cache)
+            t_warm = time.time() - t0
+            fail = None if exe.success else "compile failed"
+            if fail is None and spatial:
+                # spatial: no config to validate, but the analytic model and
+                # the interp execution path must still behave
+                out = exe.run(program.random_inputs(
+                    np.random.default_rng(0)))
+                if not (exe.II >= 1 and exe.spatial_subgraphs >= 1
+                        and set(out) == set(program.arrays)):
+                    fail = "spatial model/interp regression"
+            elif fail is None:
+                if not exe.validate(seed=0).passed:
+                    fail = "validation mismatch"
+                elif not warm.compile_info.cache_hit:
+                    fail = "warm compile missed cache"
+            ok = fail is None
+            if fail:
+                failures.append(f"{fab_name}: {fail}")
+            rows.append([f"{SMOKE_KERNEL}@{target.fabric.name}",
+                         exe.II if exe.success else -1,
+                         f"{t_cold:.2f}s", f"{t_warm * 1e3:.1f}ms",
+                         "ok" if ok else "FAIL"])
+    print("== smoke: one kernel per fabric, cache-cold then cache-warm ==")
+    print(fmt_table(["kernel@fabric", "II", "cold", "warm", "check"], rows))
+    print(f"cache: {cache.stats}")
+    for f in failures:
+        print(f"FAIL {f}")
+    return 1 if failures else 0
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast regression gate: compile one kernel per "
+                         "fabric, cold + warm, instead of the full benches")
     args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
     names = [args.only] if args.only else list(BENCHES)
     failed = []
     for name in names:

@@ -13,12 +13,10 @@ inference offload study).
 """
 import numpy as np
 
-from repro.core.adl import hycube, pace
-from repro.core.dfg import DFGBuilder, apply_layout, plan_layout, trace_into
+from repro import ual
+from repro.core.dfg import DFGBuilder, trace_into
 from repro.core.energy import kernel_energy
 from repro.core.kernel_lib import N_ITERS
-from repro.core.mapper import map_dfg
-from repro.core.validate import validate_kernel
 
 
 def qk_score():
@@ -91,16 +89,20 @@ def router_argmax():
     return b.build(), rng, N_ITERS
 
 
-fab = pace()
+target = ual.Target.from_name("pace", backend="sim")
+fab = target.fabric
 print(f"fabric: {fab.name} ({fab.n_pes} PEs, {fab.datapath_bits}-bit, "
       f"{fab.clusters} clusters)\n")
 for make in (qk_score, rwkv_decay, router_argmax):
     dfg, mk, n_iters = make()
-    rep = validate_kernel(dfg, mk, n_iters, fab)
+    program = ual.Program.from_dfg(dfg, n_iters, make_mem=mk,
+                                   n_banks=fab.n_mem_ports)
+    exe = ual.compile(program, target)
+    rep = exe.validate()
     assert rep.passed, f"{dfg.name} failed validation"
-    e = kernel_energy(rep.map_result.config, n_iters)
-    print(f"{dfg.name:14s} II={rep.map_result.II} "
-          f"(MII={rep.map_result.mii})  validated={rep.passed}  "
+    e = kernel_energy(exe.map_result.config, n_iters)
+    print(f"{dfg.name:14s} II={exe.II} "
+          f"(MII={exe.map_result.mii})  validated={rep.passed}  "
           f"E/op={e['per_op']:.1f} pJ  E/iter={e['total'] / n_iters:.0f} pJ")
 print("\noffload study OK (per-op energy in the ~290 pJ/op ballpark of the "
       "HyCUBE test chip)")

@@ -1,23 +1,30 @@
-"""Quickstart: the paper's toolchain end-to-end in ~60 lines.
+"""Quickstart: the paper's toolchain through the unified abstraction layer.
 
-Describe a CGRA in the ADL, write a kernel against the DFG builder DSL,
-map it with the modulo-scheduling mapper, execute the resulting bitstream
-on (a) the cycle-accurate simulator and (b) the Pallas TPU kernel, and
-validate both against the DFG interpreter oracle — the Morpher flow of
-paper Fig. 2.
+The UAL vocabulary (``repro.ual``) is four nouns:
+
+  * ``Program`` — a kernel DFG + planned scratchpad layout + named I/O
+    spec, built from the ``DFGBuilder`` DSL (or a kernel_lib entry, or a
+    traced JAX function),
+  * ``Target``  — a fabric from the registry (hycube/n2n/pace/spatial)
+    plus mapper strategy and a backend name,
+  * ``compile(program, target)`` — the modulo-scheduling mapper, memoized
+    on content hashes so recompiling an identical pair is near-free,
+  * ``Executable`` — dict-in/dict-out ``run()`` on any backend
+    (``interp`` oracle / ``sim`` cycle-accurate / ``pallas`` TPU kernel)
+    and ``validate()`` against the oracle.
+
+The full flow below is five UAL calls:
+``Program.from_builder`` -> ``Target.from_name`` -> ``compile`` ->
+``run`` -> ``validate``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.adl import hycube, n2n
-from repro.core.dfg import (DFGBuilder, apply_layout, flat_memory, interpret,
-                            plan_layout, unflatten_memory)
-from repro.core.mapper import map_dfg
-from repro.core.simulator import simulate
-from repro.kernels.cgra_exec.ops import cgra_exec_op
+from repro import ual
+from repro.core.dfg import DFGBuilder
 
-# -- 1. a loop kernel in the builder DSL (annotated-C analogue) --------------
+# -- a loop kernel in the builder DSL (annotated-C analogue) ------------------
 #    out[i] = clamp(a[i] * b[i] >> 4, -128, 127) + running_sum
 b = DFGBuilder("quickstart")
 N = 16
@@ -31,37 +38,31 @@ clamped = b.op("MAX", b.op("MIN", prod, 127), -128)
 total = b.op("ADD", acc, clamped)
 b.bind(acc, total)                   # close the recurrence
 b.store("out", i, total)
-dfg = b.build()
-print(f"DFG: {len(dfg.nodes)} nodes, {dfg.n_mem_ops} memory ops, "
-      f"{len(dfg.recurrence_cycles())} recurrence cycle(s)")
 
-# -- 2. plan the scratchpad layout and map onto two fabrics -------------------
-layout = plan_layout(dfg)
-laid = apply_layout(dfg, layout)
-for fabric in (hycube(4, 4, max_hops=4), n2n(4, 4)):
-    res = map_dfg(laid, fabric)
-    print(f"{fabric.name}: II={res.II} (MII={res.mii}) "
-          f"util={res.fu_util:.2f} mapped in {res.wall_s:.2f}s")
+# -- the UAL flow: Program -> Target -> compile -> run -> validate ------------
+program = ual.Program.from_builder(b, n_iters=N)                        # 1
+target = ual.Target.from_name("hycube", rows=4, cols=4, max_hops=4)     # 2
+exe = ual.compile(program, target)                                      # 3
+print(f"DFG: {len(program.dfg.nodes)} nodes, {program.dfg.n_mem_ops} "
+      f"memory ops, {len(program.dfg.recurrence_cycles())} recurrence "
+      f"cycle(s)")
+print(f"{target.fabric.name}: II={exe.II} (MII={exe.map_result.mii}) "
+      f"util={exe.map_result.fu_util:.2f} "
+      f"compiled in {exe.compile_info.wall_s:.2f}s "
+      f"({'cache hit' if exe.compile_info.cache_hit else 'cold'})")
 
-# -- 3. execute + validate (simulator AND Pallas kernel vs oracle) ------------
-fabric = hycube(4, 4)
-res = map_dfg(laid, fabric)
 rng = np.random.default_rng(0)
 mem = {"a": rng.integers(-100, 100, N).astype(np.int32),
        "b": rng.integers(-100, 100, N).astype(np.int32)}
-expect = interpret(dfg, mem, N)                     # oracle
+got = exe.run(**mem)                                                    # 4
+print(f"out[:4] = {got['out'][:4]}")
 
-flat = flat_memory(layout, mem)
-sim_out, stats = simulate(res.config, flat, N)
-got_sim = unflatten_memory(layout, sim_out, dfg.arrays)
-
-pallas_out = cgra_exec_op(res.config, flat[None], N)[0]
-got_pl = unflatten_memory(layout, pallas_out, dfg.arrays)
-
-ok_sim = bool((got_sim["out"] == expect["out"]).all())
-ok_pl = bool((got_pl["out"] == expect["out"]).all())
-print(f"cycle-accurate simulator matches oracle: {ok_sim} "
-      f"(PE activity {stats.pe_activity:.2f})")
-print(f"Pallas cgra_exec kernel matches oracle:  {ok_pl}")
-assert ok_sim and ok_pl
+# oracle / cycle-accurate sim / Pallas cgra_exec, bit-exact on random vectors
+report = exe.validate(seed=0, backends=("sim", "pallas"))               # 5
+print(f"cycle-accurate simulator matches oracle: "
+      f"{report.backend_results['sim']} "
+      f"(PE activity {report.sim_stats.pe_activity:.2f})")
+print(f"Pallas cgra_exec kernel matches oracle:  "
+      f"{report.backend_results['pallas']}")
+assert report.passed
 print("quickstart OK")

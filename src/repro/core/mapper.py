@@ -27,6 +27,11 @@ from repro.core.dfg import DFG
 from repro.core.machine import MachineConfig, emit_config
 from repro.core.mrrg import Occupancy, Route, Router
 
+#: bump whenever mapping behavior changes (placement order, routing cost,
+#: restart schedule, ...) — the UAL mapping cache folds this into its key,
+#: so stale on-disk MapResults from an older mapper are never served
+MAPPER_VERSION = 1
+
 
 @dataclass
 class MapResult:

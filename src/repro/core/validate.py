@@ -1,23 +1,21 @@
 """End-to-end validation: map -> simulate -> check (paper Table II rows
 "Test data generation" and "Validation against test data").
 
-For a kernel DFG this pipeline (1) plans the data layout, (2) maps the DFG
-onto the fabric, (3) lowers to a machine configuration, (4) generates random
-test vectors, (5) runs both the DFG interpreter (oracle) and the
-cycle-accurate simulator, and (6) compares every output array bit-exactly.
+The bespoke layout/map/flatten/simulate/compare loop that used to live
+here is now ``Executable.validate()`` in the unified abstraction layer
+(``repro.ual``); ``validate_kernel`` remains as the stable entry point and
+delegates — existing callers keep working and now share the UAL mapping
+cache.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
-import numpy as np
-
 from repro.core.adl import Fabric
-from repro.core.dfg import (DFG, apply_layout, flat_memory, interpret,
-                            plan_layout, unflatten_memory)
-from repro.core.mapper import MapResult, map_dfg
-from repro.core.simulator import SimStats, simulate
+from repro.core.dfg import DFG
+from repro.core.mapper import MapResult
+from repro.core.simulator import SimStats
 
 
 @dataclass
@@ -29,6 +27,7 @@ class ValidationReport:
     n_iters: int
     sim_stats: Optional[SimStats] = None
     mismatches: int = 0
+    backend_results: Optional[Dict[str, bool]] = field(default=None)
 
     def __str__(self) -> str:
         status = "PASS" if self.passed else "FAIL"
@@ -42,22 +41,14 @@ class ValidationReport:
 def validate_kernel(dfg: DFG, make_mem: Callable, n_iters: int,
                     fabric: Fabric, seed: int = 0, ii_max: int = 48,
                     strategy: str = "adaptive") -> ValidationReport:
-    layout = plan_layout(dfg, n_banks=fabric.n_mem_ports,
-                         bank_words=max(2048, max(dfg.arrays.values()) + 64))
-    laid = apply_layout(dfg, layout)
-    result = map_dfg(laid, fabric, ii_max=ii_max, seed=seed, strategy=strategy)
-    if not result.success:
-        return ValidationReport(dfg.name, fabric.name, result, False, n_iters)
-    rng = np.random.default_rng(seed)
-    mem_in = make_mem(rng)
-    # oracle: DFG interpreter on named arrays
-    expect = interpret(dfg, mem_in, n_iters)
-    # device: cycle-accurate simulation of the machine configuration
-    flat = flat_memory(layout, mem_in)
-    flat_out, stats = simulate(result.config, flat, n_iters)
-    got = unflatten_memory(layout, flat_out, dfg.arrays)
-    mism = 0
-    for name in dfg.outputs:
-        mism += int((expect[name] != got[name]).sum())
-    return ValidationReport(dfg.name, fabric.name, result, mism == 0,
-                            n_iters, stats, mism)
+    """Map ``dfg`` onto ``fabric`` and check the simulated configuration
+    bit-exactly against the DFG-interpreter oracle on random test vectors.
+    """
+    # function-level import: ual imports ValidationReport from this module
+    from repro import ual
+    program = ual.Program.from_dfg(dfg, n_iters, make_mem=make_mem,
+                                   n_banks=fabric.n_mem_ports)
+    target = ual.Target(fabric, backend="sim", strategy=strategy,
+                        ii_max=ii_max, seed=seed)
+    exe = ual.compile(program, target)
+    return exe.validate(seed=seed, n_iters=n_iters, make_mem=make_mem)

@@ -1,0 +1,41 @@
+"""Unified abstraction layer (UAL): the repo's stable public API.
+
+The paper closes with a call for "a unified abstraction layer for CGRAs
+and spatial accelerators, one that decouples hardware specialization from
+software development".  This package is that layer::
+
+    from repro import ual
+
+    program = ual.Program.from_builder(b, n_iters=16)   # what to run
+    target = ual.Target.from_name("hycube", rows=4, cols=4)  # where
+    exe = ual.compile(program, target)                  # cached mapping
+    out = exe.run(a=a, b=b)                             # dict in/out
+    report = exe.validate(backends=("sim", "pallas"))   # vs the oracle
+
+Vocabulary:
+
+  * ``Program``  — DFG + scratchpad layout + named I/O spec, content-hashed,
+  * ``Target``   — fabric + mapper strategy + backend name,
+  * ``compile``  — modulo mapping, memoized across processes by
+    ``(program.digest, target.digest)``,
+  * ``Executable`` — ``run``/``run_batch``/``validate`` on any backend.
+
+Extension points: ``register_backend`` (interp/sim/pallas ship built-in)
+and ``register_fabric`` (hycube/n2n/pace/spatial/tpu_pod ship built-in).
+"""
+from repro.ual.backends import (Backend, get_backend, list_backends,
+                                register_backend)
+from repro.ual.cache import (CACHE_VERSION, CacheStats, MappingCache,
+                             default_cache, default_cache_dir,
+                             set_default_cache)
+from repro.ual.compiler import compile
+from repro.ual.executable import CompileInfo, Executable
+from repro.ual.program import Program
+from repro.ual.target import FABRICS, Target, register_fabric
+
+__all__ = [
+    "Backend", "CACHE_VERSION", "CacheStats", "CompileInfo", "Executable",
+    "FABRICS", "MappingCache", "Program", "Target", "compile",
+    "default_cache", "default_cache_dir", "get_backend", "list_backends",
+    "register_backend", "register_fabric", "set_default_cache",
+]

@@ -1,0 +1,132 @@
+"""Pluggable execution backends for the unified abstraction layer.
+
+A backend turns ``(Program, MapResult, named arrays)`` into named output
+arrays.  Three ship with the repo:
+
+  * ``interp``  — the DFG interpreter oracle (no mapping required; the
+    reference semantics every other backend must match bit-exactly),
+  * ``sim``     — the cycle-accurate simulator executing the mapped
+    machine configuration,
+  * ``pallas``  — the Pallas ``cgra_exec`` TPU kernel executing the same
+    configuration (batched; interpret-mode on CPU).
+
+Third parties extend the layer with ``register_backend("mine", MyBackend())``
+— see ROADMAP.md for a worked example.  Backends are resolved by name at
+``compile()`` time; unknown names raise with the list of registered ones.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dfg import interpret
+from repro.core.mapper import MapResult
+from repro.ual.program import Program
+
+Mem = Dict[str, np.ndarray]
+Info = Dict[str, object]
+
+
+class Backend:
+    """Base class: subclass and override ``execute`` (and optionally
+    ``execute_batch`` when the device can batch natively)."""
+
+    #: whether ``compile()`` must produce a machine configuration first
+    requires_config: bool = True
+
+    def execute(self, program: Program, result: Optional[MapResult],
+                mem: Mem, n_iters: int) -> Tuple[Mem, Info]:
+        raise NotImplementedError
+
+    def execute_batch(self, program: Program, result: Optional[MapResult],
+                      mems: List[Mem], n_iters: int
+                      ) -> Tuple[List[Mem], Info]:
+        outs = []
+        info: Info = {}
+        for m in mems:
+            out, info = self.execute(program, result, m, n_iters)
+            outs.append(out)
+        return outs, info
+
+
+class InterpBackend(Backend):
+    """DFG-interpreter oracle: executes the *pre-layout* DFG directly."""
+
+    requires_config = False
+
+    def execute(self, program, result, mem, n_iters):
+        program.check_arrays(mem)
+        return interpret(program.dfg, mem, n_iters), {}
+
+
+class SimBackend(Backend):
+    """Cycle-accurate simulation of the mapped configuration."""
+
+    def execute(self, program, result, mem, n_iters):
+        from repro.core.simulator import simulate
+        flat = program.flatten(mem)
+        out, stats = simulate(result.config, flat, n_iters)
+        return program.unflatten(out), {"sim_stats": stats}
+
+
+class PallasBackend(Backend):
+    """Pallas ``cgra_exec`` TPU kernel (interpret-mode on CPU)."""
+
+    def __init__(self, lanes: int = 128, interpret: bool = True):
+        self.lanes = lanes
+        self.interpret = interpret
+
+    def _run(self, program, result, flats: np.ndarray, n_iters: int):
+        from repro.kernels.cgra_exec.ops import cgra_exec_op
+        return cgra_exec_op(result.config, flats, n_iters,
+                            lanes=self.lanes, interpret=self.interpret)
+
+    def execute(self, program, result, mem, n_iters):
+        flat = program.flatten(mem)
+        out = self._run(program, result, flat[None], n_iters)[0]
+        return program.unflatten(out), {}
+
+    def execute_batch(self, program, result, mems, n_iters):
+        flats = np.stack([program.flatten(m) for m in mems])
+        outs = self._run(program, result, flats, n_iters)
+        return [program.unflatten(o) for o in outs], {"batched": True}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, backend: Backend,
+                     overwrite: bool = False) -> None:
+    """Register an execution backend under ``name``.
+
+    Registering an existing name raises unless ``overwrite=True`` — silent
+    replacement is how two plugins stomp each other.
+    """
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    if not isinstance(backend, Backend):
+        raise TypeError(f"backend must be a ual.backends.Backend, "
+                        f"got {type(backend).__name__}")
+    _BACKENDS[name] = backend
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"registered: {sorted(_BACKENDS)}")
+    return _BACKENDS[name]
+
+
+def list_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+register_backend("interp", InterpBackend())
+register_backend("sim", SimBackend())
+register_backend("pallas", PallasBackend())

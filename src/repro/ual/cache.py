@@ -1,0 +1,135 @@
+"""Mapping cache: memoizes ``MapResult`` per ``(program, target)`` pair.
+
+Modulo mapping dominates the toolchain's wall time (seconds to minutes per
+kernel, with restarts), yet the suite compiles the same kernels onto the
+same fabrics over and over.  The cache keys on
+``(program.digest, target.digest)`` — both stable content hashes — and
+keeps results in two layers:
+
+  * an in-process dict (free hits within one run),
+  * an on-disk pickle directory (hits across processes: test runs,
+    benchmark re-runs, CI re-tries).
+
+Hit/miss/store counters are exposed for tests to assert cache behavior.
+The disk layer defaults to ``$REPRO_UAL_CACHE`` or ``artifacts/ual_cache``
+next to the repo; pass ``MappingCache(disk_dir=None)`` for a purely
+in-process cache.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+from repro.core.mapper import MAPPER_VERSION, MapResult
+
+#: bump to invalidate on-disk entries when the MapResult/MachineConfig
+#: pickle format changes; mapper *behavior* changes are covered separately
+#: by core.mapper.MAPPER_VERSION (also folded into the entry name)
+CACHE_VERSION = 1
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get("REPRO_UAL_CACHE")
+    if env:
+        return Path(env)
+    # src/repro/ual/cache.py -> repo root / artifacts / ual_cache, but only
+    # when we actually live in a source checkout; for an installed package
+    # parents[3] is the Python prefix, which must not be written to
+    root = Path(__file__).resolve().parents[3]
+    if (root / "pyproject.toml").exists() or (root / ".git").exists():
+        return root / "artifacts" / "ual_cache"
+    xdg = os.environ.get("XDG_CACHE_HOME", str(Path.home() / ".cache"))
+    return Path(xdg) / "repro_ual"
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    stores: int = 0
+    disk_hits: int = 0
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.stores = self.disk_hits = 0
+
+
+@dataclass
+class MappingCache:
+    disk_dir: Optional[Path] = field(default_factory=default_cache_dir)
+    stats: CacheStats = field(default_factory=CacheStats)
+    _mem: Dict[Tuple[str, str], MapResult] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.disk_dir is not None:
+            self.disk_dir = Path(self.disk_dir)
+
+    def _path(self, key: Tuple[str, str]) -> Path:
+        pdig, tdig = key
+        return (self.disk_dir /
+                f"v{CACHE_VERSION}m{MAPPER_VERSION}_"
+                f"{pdig[:20]}_{tdig[:20]}.pkl")
+
+    def get(self, key: Tuple[str, str]) -> Optional[MapResult]:
+        if key in self._mem:
+            self.stats.hits += 1
+            return self._mem[key]
+        if self.disk_dir is not None:
+            path = self._path(key)
+            if path.exists():
+                try:
+                    with path.open("rb") as f:
+                        result = pickle.load(f)
+                except (OSError, pickle.UnpicklingError, EOFError,
+                        AttributeError, ImportError):
+                    pass  # stale/corrupt entry: treat as a miss
+                else:
+                    self._mem[key] = result
+                    self.stats.hits += 1
+                    self.stats.disk_hits += 1
+                    return result
+        self.stats.misses += 1
+        return None
+
+    def put(self, key: Tuple[str, str], result: MapResult, *,
+            memory_only: bool = False) -> None:
+        self._mem[key] = result
+        self.stats.stores += 1
+        if memory_only or self.disk_dir is None:
+            return
+        self.disk_dir.mkdir(parents=True, exist_ok=True)
+        path = self._path(key)
+        tmp = path.with_suffix(f".tmp.{os.getpid()}")
+        with tmp.open("wb") as f:
+            pickle.dump(result, f, protocol=pickle.HIGHEST_PROTOCOL)
+        tmp.replace(path)  # atomic: concurrent compiles never read torn files
+
+    def clear_memory(self) -> None:
+        """Drop the in-process layer (disk entries survive) — lets tests
+        exercise the cross-process path without spawning a process."""
+        self._mem.clear()
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+
+_default: Optional[MappingCache] = None
+
+
+def default_cache() -> MappingCache:
+    """The process-wide cache ``compile()`` uses when none is passed."""
+    global _default
+    if _default is None:
+        _default = MappingCache()
+    return _default
+
+
+def set_default_cache(cache: Optional[MappingCache]) -> MappingCache:
+    """Swap the process-wide cache (e.g. a tmp-dir cache in tests);
+    returns the previous one so callers can restore it."""
+    global _default
+    prev = default_cache()
+    _default = cache
+    return prev

@@ -1,0 +1,153 @@
+"""``Executable`` — a compiled (Program, Target) pair, dict-in/dict-out.
+
+``compile()`` produces one of these.  It owns the mapping artifacts
+(``MapResult`` with the machine configuration) plus compile-time metadata
+(cache hit?  how many mapper restarts did *this* compile pay?), and runs on
+any registered backend with automatic flatten/unflatten of the named
+arrays:
+
+    exe = compile(program, target)
+    out = exe.run(a=a, b=b)                  # dict in, dict out
+    outs = exe.run_batch([{...}, {...}])     # natively batched on pallas
+    report = exe.validate(seed=0)            # vs the DFG-interpreter oracle
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.mapper import MapResult
+from repro.ual.backends import Backend, get_backend
+from repro.ual.program import Program
+from repro.ual.target import Target
+
+
+@dataclass
+class CompileInfo:
+    cache_hit: bool = False
+    mapper_restarts: int = 0      # restarts paid by THIS compile (0 on hit)
+    wall_s: float = 0.0
+    key: Optional[Tuple[str, str]] = None
+
+
+@dataclass
+class Executable:
+    program: Program
+    target: Target
+    map_result: Optional[MapResult]          # None for mapping-free backends
+    compile_info: CompileInfo = field(default_factory=CompileInfo)
+    spatial_subgraphs: int = 0               # spatial fabrics: #subgraphs
+    last_info: Dict[str, object] = field(default_factory=dict)
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def II(self) -> Optional[int]:
+        """Achieved initiation interval; None for mapping-free executables
+        (interp backend), where no II exists to compare."""
+        return self.map_result.II if self.map_result else None
+
+    @property
+    def success(self) -> bool:
+        return self.map_result.success if self.map_result else True
+
+    def __str__(self) -> str:
+        ii = self.II if self.success else "unmapped"
+        hit = "cache" if self.compile_info.cache_hit else "cold"
+        return (f"Executable({self.program.name} on {self.target.name}: "
+                f"II={ii}, {hit}, {self.compile_info.wall_s:.2f}s)")
+
+    # -- execution ------------------------------------------------------------
+    def _resolve(self, backend: Optional[str]) -> Backend:
+        name = backend or self.target.backend
+        be = get_backend(name)
+        if be.requires_config:
+            if self.map_result is not None and not self.map_result.success:
+                raise RuntimeError(
+                    f"{self.program.name}: mapping onto "
+                    f"{self.target.fabric.name} failed "
+                    f"(ii_max={self.target.ii_max}, "
+                    f"{self.map_result.restarts} restarts); raise ii_max / "
+                    f"max_restarts or use a larger fabric")
+            if self.map_result is None or self.map_result.config is None:
+                raise RuntimeError(
+                    f"{self.program.name}: backend {name!r} needs a machine "
+                    f"configuration, but this executable has none (compiled "
+                    f"for a mapping-free backend or a spatial fabric); "
+                    f"recompile with a temporal fabric target")
+        return be
+
+    def run(self, arrays: Optional[Dict[str, np.ndarray]] = None,
+            n_iters: Optional[int] = None, *,
+            backend: Optional[str] = None,
+            **named: np.ndarray) -> Dict[str, np.ndarray]:
+        """Execute with named input arrays; returns all named arrays after
+        the run (outputs updated, inputs passed through).
+
+        Arrays go in the ``arrays`` dict or as keyword arguments; use the
+        dict form when an array name collides with a parameter name here
+        (``arrays``/``n_iters``/``backend``).
+        """
+        be = self._resolve(backend)
+        mem = dict(arrays or {})
+        mem.update(named)
+        n = n_iters if n_iters is not None else self.program.n_iters
+        out, info = be.execute(self.program, self.map_result, mem, n)
+        self.last_info = info
+        return out
+
+    def run_batch(self, mems: Sequence[Dict[str, np.ndarray]],
+                  n_iters: Optional[int] = None, *,
+                  backend: Optional[str] = None
+                  ) -> List[Dict[str, np.ndarray]]:
+        be = self._resolve(backend)
+        n = n_iters if n_iters is not None else self.program.n_iters
+        outs, info = be.execute_batch(self.program, self.map_result,
+                                      list(mems), n)
+        self.last_info = info
+        return outs
+
+    # -- validation -----------------------------------------------------------
+    def validate(self, seed: int = 0, n_iters: Optional[int] = None,
+                 make_mem=None, backends: Optional[Sequence[str]] = None):
+        """Random test vectors -> oracle vs backend(s), bit-exact.
+
+        Replaces the bespoke loop that used to live in ``core/validate.py``:
+        generates inputs (the Program's ``make_mem`` or uniform random),
+        runs the DFG-interpreter oracle once, then every requested backend,
+        and counts word mismatches over the declared output arrays.
+        """
+        from repro.core.dfg import interpret
+        from repro.core.validate import ValidationReport
+
+        if not self.success:
+            return ValidationReport(self.program.name, self.target.fabric.name,
+                                    self.map_result, False,
+                                    n_iters or self.program.n_iters)
+        n = n_iters if n_iters is not None else self.program.n_iters
+        rng = np.random.default_rng(seed)
+        mem_in = (dict(make_mem(rng)) if make_mem is not None
+                  else self.program.random_inputs(rng))
+        expect = interpret(self.program.dfg, mem_in, n)
+
+        names = backends if backends is not None else (self.target.backend,)
+        if "interp" in names:
+            raise ValueError(
+                "validate(): 'interp' IS the validation oracle — comparing "
+                "it against itself always passes; validate a device backend "
+                "instead, e.g. backends=('sim',) or ('sim', 'pallas')")
+        mism = 0
+        sim_stats = None
+        per_backend: Dict[str, bool] = {}
+        for bname in names:
+            got = self.run(mem_in, n, backend=bname)
+            bad = sum(int((expect[a] != got[a]).sum())
+                      for a in self.program.outputs)
+            per_backend[bname] = bad == 0
+            mism += bad
+            if "sim_stats" in self.last_info:
+                sim_stats = self.last_info["sim_stats"]
+        return ValidationReport(self.program.name, self.target.fabric.name,
+                                self.map_result, mism == 0, n, sim_stats,
+                                mism, backend_results=per_backend)

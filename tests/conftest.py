@@ -1,0 +1,20 @@
+"""Shared fixtures: one UAL mapping cache for the whole test session.
+
+Mapping dominates the suite's wall time, and many tests compile the same
+``(kernel, fabric)`` pairs.  Installing a session-wide cache (in-process
+dict + tmp disk dir) as the UAL default means the first test to compile a
+pair pays the mapper cost and every later test — in any file — hits the
+cache, including indirect consumers like ``core.validate.validate_kernel``.
+"""
+import pytest
+
+from repro import ual
+
+
+@pytest.fixture(scope="session", autouse=True)
+def ual_cache(tmp_path_factory):
+    """Session-scoped mapping cache, installed as the process default."""
+    cache = ual.MappingCache(disk_dir=tmp_path_factory.mktemp("ual_cache"))
+    prev = ual.set_default_cache(cache)
+    yield cache
+    ual.set_default_cache(prev)

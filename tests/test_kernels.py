@@ -149,16 +149,14 @@ def test_ssd_matches_model_chunked():
 # ---------------------------------------------------------------------------
 
 def _mapped(kernel_name, fabric):
-    from repro.core.dfg import apply_layout, flat_memory, plan_layout
-    from repro.core.kernel_lib import KERNELS
-    from repro.core.mapper import map_dfg
-    dfg, mk, n_iters = KERNELS[kernel_name]()
-    layout = plan_layout(dfg, n_banks=fabric.n_mem_ports,
-                         bank_words=max(2048, max(dfg.arrays.values()) + 64))
-    laid = apply_layout(dfg, layout)
-    res = map_dfg(laid, fabric)
-    assert res.success, f"{kernel_name} failed to map on {fabric.name}"
-    return res, layout, mk, n_iters
+    """Compile via the UAL so identical pairs are mapped once per session
+    (the conftest installs a shared mapping cache)."""
+    from repro import ual
+    program = ual.Program.from_kernel(kernel_name,
+                                      n_banks=fabric.n_mem_ports)
+    exe = ual.compile(program, ual.Target(fabric))
+    assert exe.success, f"{kernel_name} failed to map on {fabric.name}"
+    return exe.map_result, program.layout, program.make_mem, program.n_iters
 
 
 @pytest.mark.parametrize("kernel_name", ["gemm", "fft", "adpcm", "aes",

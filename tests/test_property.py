@@ -9,6 +9,8 @@ kernel library misses.
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.adl import hycube

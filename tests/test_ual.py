@@ -1,0 +1,322 @@
+"""Unified abstraction layer tests: backend parity, mapping cache,
+registry error handling, and digest stability.
+
+The UAL contract under test:
+
+  * every backend executes the same machine configuration bit-exactly
+    (interp oracle == sim == pallas),
+  * ``compile()`` of an identical ``(Program, Target)`` pair is served
+    from the cache — zero mapper restarts, >= 10x faster than cold —
+    both in-process and across processes (disk layer),
+  * registries fail loudly: unknown names raise with the known set,
+    duplicate registration raises without ``overwrite=True``,
+  * ``Program.digest`` is a content hash: stable across processes,
+    sensitive to structural change.
+"""
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import ual
+from repro.core.adl import hycube
+from repro.core.dfg import DFGBuilder
+
+PARITY_KERNELS = ("gemm", "nw")
+
+
+# ---------------------------------------------------------------------------
+# backend parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kname", PARITY_KERNELS)
+def test_backend_parity_bitexact(kname):
+    """interp == sim == pallas on the same compiled executable."""
+    program = ual.Program.from_kernel(kname)
+    exe = ual.compile(program, ual.Target.from_name("hycube", rows=4, cols=4))
+    mem = program.random_inputs(np.random.default_rng(0))
+    outs = {b: exe.run(backend=b, **mem) for b in ("interp", "sim", "pallas")}
+    for name in program.outputs:
+        np.testing.assert_array_equal(outs["sim"][name], outs["interp"][name])
+        np.testing.assert_array_equal(outs["pallas"][name],
+                                      outs["interp"][name])
+
+
+def test_run_batch_matches_per_item():
+    """pallas' native batch path == item-by-item sim execution."""
+    program = ual.Program.from_kernel("gemm")
+    exe = ual.compile(program, ual.Target.from_name("hycube", rows=4, cols=4,
+                                                    backend="pallas"))
+    rng = np.random.default_rng(7)
+    mems = [program.random_inputs(rng) for _ in range(3)]
+    batched = exe.run_batch(mems)
+    assert exe.last_info.get("batched")
+    for m, got in zip(mems, batched):
+        want = exe.run(backend="sim", **m)
+        for name in program.outputs:
+            np.testing.assert_array_equal(got[name], want[name])
+
+
+def test_validate_refuses_oracle_vs_itself():
+    """interp is the oracle: validating it against itself is vacuous."""
+    program = ual.Program.from_kernel("gemm")
+    exe = ual.compile(program, ual.Target(hycube(4, 4), backend="interp"))
+    with pytest.raises(ValueError, match="IS the validation oracle"):
+        exe.validate()
+    with pytest.raises(ValueError, match="IS the validation oracle"):
+        exe.validate(backends=("sim", "interp"))
+
+
+def test_validate_multi_backend():
+    program = ual.Program.from_kernel("nw")
+    exe = ual.compile(program, ual.Target.from_name("hycube", rows=4, cols=4))
+    rep = exe.validate(seed=5, backends=("sim", "pallas"))
+    assert rep.passed
+    assert rep.backend_results == {"sim": True, "pallas": True}
+    assert rep.sim_stats is not None
+
+
+# ---------------------------------------------------------------------------
+# mapping cache
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trip_zero_restarts_and_10x(tmp_path):
+    """Acceptance: the second compile of an identical pair hits the cache —
+    zero mapper restarts and >= 10x lower wall time than the cold compile."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("fft")
+    target = ual.Target.from_name("hycube", rows=4, cols=4)
+
+    t0 = time.perf_counter()
+    cold = ual.compile(program, target, cache=cache)
+    t_cold = time.perf_counter() - t0
+    assert cold.success and not cold.compile_info.cache_hit
+    assert cold.compile_info.mapper_restarts >= 1
+    assert cache.stats.misses == 1 and cache.stats.stores == 1
+
+    t0 = time.perf_counter()
+    warm = ual.compile(program, target, cache=cache)
+    t_warm = time.perf_counter() - t0
+    assert warm.compile_info.cache_hit
+    assert warm.compile_info.mapper_restarts == 0
+    assert cache.stats.hits == 1
+    assert warm.II == cold.II
+    assert t_warm < t_cold / 10, (t_cold, t_warm)
+
+    # cross-process path: drop the in-process layer, hit the disk pickle
+    cache.clear_memory()
+    t0 = time.perf_counter()
+    disk = ual.compile(program, target, cache=cache)
+    t_disk = time.perf_counter() - t0
+    assert disk.compile_info.cache_hit
+    assert disk.compile_info.mapper_restarts == 0
+    assert cache.stats.disk_hits == 1
+    assert disk.II == cold.II
+    np.testing.assert_array_equal(disk.map_result.config.opcode,
+                                  cold.map_result.config.opcode)
+    assert t_disk < t_cold / 10, (t_cold, t_disk)
+
+
+def test_cache_shared_across_backends(tmp_path):
+    """Target.digest excludes the backend: parity costs one mapping."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    sim = ual.Target.from_name("hycube", rows=4, cols=4, backend="sim")
+    ual.compile(program, sim, cache=cache)
+    exe = ual.compile(program, sim.with_backend("pallas"), cache=cache)
+    assert exe.compile_info.cache_hit
+    assert cache.stats.misses == 1 and cache.stats.hits == 1
+
+
+def test_cache_keys_distinguish_targets(tmp_path):
+    """Different fabrics / mapper knobs must not collide."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    ual.compile(program, ual.Target(hycube(4, 4, max_hops=4)), cache=cache)
+    ual.compile(program, ual.Target(hycube(4, 4, max_hops=1)), cache=cache)
+    ual.compile(program, ual.Target(hycube(4, 4, max_hops=4), seed=9),
+                cache=cache)
+    assert cache.stats.misses == 3 and cache.stats.hits == 0
+
+
+def test_label_fn_bypasses_cache(tmp_path):
+    """A placement-bias hook is unhashable state: always compile cold."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    target = ual.Target(hycube(4, 4), label_fn=lambda nid, pe, ii: 0.0)
+    exe = ual.compile(program, target, cache=cache)
+    exe2 = ual.compile(program, target, cache=cache)
+    assert exe.success and exe2.success
+    assert not exe2.compile_info.cache_hit
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_unknown_backend_raises_with_known_set():
+    program = ual.Program.from_kernel("gemm")
+    with pytest.raises(KeyError, match="unknown backend 'vhdl'.*interp"):
+        ual.compile(program, ual.Target(hycube(4, 4), backend="vhdl"))
+
+
+def test_duplicate_backend_registration_raises():
+    class Dummy(ual.Backend):
+        def execute(self, program, result, mem, n_iters):
+            return mem, {}
+
+    ual.register_backend("dummy_test_backend", Dummy())
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            ual.register_backend("dummy_test_backend", Dummy())
+        ual.register_backend("dummy_test_backend", Dummy(), overwrite=True)
+        assert "dummy_test_backend" in ual.list_backends()
+    finally:
+        ual.backends._BACKENDS.pop("dummy_test_backend", None)
+
+
+def test_backend_must_subclass_backend():
+    with pytest.raises(TypeError, match="must be a ual.backends.Backend"):
+        ual.register_backend("broken", lambda *a: None)
+
+
+def test_unknown_fabric_and_kernel_raise():
+    with pytest.raises(KeyError, match="unknown fabric 'fpga'.*hycube"):
+        ual.Target.from_name("fpga")
+    with pytest.raises(KeyError, match="unknown kernel 'nope'"):
+        ual.Program.from_kernel("nope")
+
+
+def test_custom_backend_end_to_end():
+    """The ROADMAP's "writing a custom backend" snippet actually works: a
+    backend that executes via the interpreter but tags its info dict."""
+    from repro.core.dfg import interpret
+
+    class TracingBackend(ual.Backend):
+        requires_config = False
+
+        def execute(self, program, result, mem, n_iters):
+            out = interpret(program.dfg, mem, n_iters)
+            return out, {"traced": program.name}
+
+    ual.register_backend("tracing_test", TracingBackend())
+    try:
+        program = ual.Program.from_kernel("gemm")
+        exe = ual.compile(program, ual.Target(hycube(4, 4),
+                                              backend="tracing_test"))
+        out = exe.run(**program.random_inputs(np.random.default_rng(0)))
+        assert exe.last_info == {"traced": "gemm"}
+        assert "C" in out
+    finally:
+        ual.backends._BACKENDS.pop("tracing_test", None)
+
+
+# ---------------------------------------------------------------------------
+# digests
+# ---------------------------------------------------------------------------
+
+def test_program_digest_stable_across_processes():
+    """The digest is a content hash, not an id() artifact: a fresh process
+    computes the same value."""
+    import os
+    from pathlib import Path
+    digest = ual.Program.from_kernel("gemm").digest
+    code = ("from repro import ual; "
+            "print(ual.Program.from_kernel('gemm').digest)")
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, check=True, env=env, cwd=str(repo))
+    assert out.stdout.strip() == digest
+
+
+def test_program_digest_sensitivity():
+    """Structurally different programs hash differently; identical ones
+    hash identically (name and n_iters excluded by design)."""
+    def build(const):
+        b = DFGBuilder("sens")
+        b.array("x", 8)
+        b.array("out", 8, output=True)
+        i = b.counter()
+        b.store("out", i, b.op("ADD", b.load("x", i), const))
+        return ual.Program.from_builder(b, n_iters=8)
+
+    assert build(3).digest == build(3).digest
+    assert build(3).digest != build(4).digest
+    renamed = ual.Program.from_kernel("gemm")
+    assert renamed.digest == ual.Program.from_kernel("gemm").digest
+
+
+def test_target_digest_covers_knobs_not_backend():
+    t = ual.Target.from_name("hycube", rows=4, cols=4)
+    assert t.digest == t.with_backend("pallas").digest
+    assert t.digest != ual.Target.from_name("hycube", rows=4, cols=4,
+                                            seed=1).digest
+    assert t.digest != ual.Target.from_name("hycube", rows=4, cols=4,
+                                            ii_max=32).digest
+
+
+# ---------------------------------------------------------------------------
+# frontends + spatial targets
+# ---------------------------------------------------------------------------
+
+def test_program_from_function_traced():
+    program = ual.Program.from_function(
+        lambda x, y: x * y + 1, {"x": 8, "y": 8}, name="traced_mul")
+    exe = ual.compile(program, ual.Target(hycube(4, 4)))
+    rng = np.random.default_rng(0)
+    x = rng.integers(-10, 10, 8).astype(np.int32)
+    y = rng.integers(-10, 10, 8).astype(np.int32)
+    out = exe.run(x=x, y=y)
+    np.testing.assert_array_equal(out["out"], x * y + 1)
+
+
+def test_spatial_target_analytic_model():
+    program = ual.Program.from_kernel("gemm")
+    exe = ual.compile(program, ual.Target.from_name("spatial",
+                                                    backend="interp"))
+    assert exe.success and exe.II >= 1 and exe.spatial_subgraphs >= 1
+    # spatial fabrics have no machine configuration: sim must refuse
+    with pytest.raises(RuntimeError, match="machine configuration"):
+        exe.run(backend="sim")
+
+
+def test_run_rejects_unknown_array():
+    program = ual.Program.from_kernel("gemm")
+    exe = ual.compile(program, ual.Target(hycube(4, 4)))
+    with pytest.raises(KeyError, match="unknown array"):
+        exe.run(bogus=np.zeros(4, np.int32))
+
+
+def test_run_dict_form_handles_colliding_array_names():
+    """Arrays named like run() parameters must work via the dict form."""
+    program = ual.Program.from_function(
+        lambda n_iters: n_iters + 1, {"n_iters": 8}, name="collide")
+    exe = ual.compile(program, ual.Target(hycube(4, 4)))
+    x = np.arange(8, dtype=np.int32)
+    out = exe.run({"n_iters": x})
+    np.testing.assert_array_equal(out["out"], x + 1)
+    assert exe.validate(seed=0).passed
+
+
+def test_failed_mapping_reports_mapping_failure(tmp_path):
+    """A temporal mapping that fails must say so, not claim the executable
+    is mapping-free — and the failure is memoized in-process (so repeat
+    compiles are free) but never pinned on disk (failure can be
+    wall-clock dependent via the time budget)."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("dct")       # 79 nodes
+    target = ual.Target(hycube(2, 2), ii_max=1)
+    exe = ual.compile(program, target, cache=cache)
+    assert not exe.success
+    with pytest.raises(RuntimeError, match="mapping onto .* failed"):
+        exe.run(x=np.zeros(8, np.int32))
+    again = ual.compile(program, target, cache=cache)
+    assert again.compile_info.cache_hit and not again.success
+    assert not list((tmp_path / "ual").glob("*.pkl"))   # nothing on disk
+    cache.clear_memory()
+    cold = ual.compile(program, target, cache=cache)
+    assert not cold.compile_info.cache_hit               # retried for real
