@@ -28,8 +28,8 @@ def fmt_table(headers: Sequence[str], rows: List[Sequence]) -> str:
 
 class Timer:
     def __enter__(self):
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()
         return self
 
     def __exit__(self, *a):
-        self.s = time.time() - self.t0
+        self.s = time.perf_counter() - self.t0

@@ -7,8 +7,11 @@ returns machine-checkable claim booleans; the run fails (exit 1) if any
 paper claim is violated.
 
 ``--smoke`` skips the full benches and instead compiles one kernel per
-registered temporal fabric through the UAL, cache-cold then cache-warm —
-a fast regression gate for the toolchain + mapping cache (used by CI).
+registered temporal fabric through the UAL, cache-cold then cache-warm,
+then runs a 2-fabric x 2-strategy mini-sweep through
+``compile_many(workers=2)`` — a fast regression gate for the toolchain,
+mapping cache and DSE front-end (used by CI, which uploads the resulting
+``artifacts/bench/smoke.json``).
 """
 from __future__ import annotations
 
@@ -17,11 +20,11 @@ import sys
 import tempfile
 import time
 
-from benchmarks import (bench_fig9_spatial_vs_st, bench_fig10_voltage,
-                        bench_fig11_breakdown, bench_roofline,
-                        bench_table2_validation, bench_table3_multihop,
-                        bench_table4_efficiency)
-from benchmarks.common import fmt_table
+from benchmarks import (bench_dse, bench_fig9_spatial_vs_st,
+                        bench_fig10_voltage, bench_fig11_breakdown,
+                        bench_roofline, bench_table2_validation,
+                        bench_table3_multihop, bench_table4_efficiency)
+from benchmarks.common import fmt_table, save
 
 BENCHES = {
     "table2_validation": bench_table2_validation.run,
@@ -31,6 +34,7 @@ BENCHES = {
     "fig10_voltage": bench_fig10_voltage.run,
     "fig11_breakdown": bench_fig11_breakdown.run,
     "roofline": bench_roofline.run,
+    "dse_explore": bench_dse.run,
 }
 
 SMOKE_TARGETS = (
@@ -43,10 +47,12 @@ SMOKE_KERNEL = "gemm"
 
 
 def smoke() -> int:
-    """Compile one kernel per fabric, cold then warm; validate on sim.
+    """Compile one kernel per fabric (cold + warm), validate on sim, then
+    mini-sweep 2 fabrics x 2 strategies through ``compile_many(workers=2)``.
 
-    Exit non-zero if any compile fails, any validation mismatches, or the
-    warm compile misses the cache.
+    Exit non-zero if any compile fails, any validation mismatches, the
+    warm compile misses the cache, or the sweep pays redundant mappings.
+    Writes ``artifacts/bench/smoke.json`` (uploaded by CI).
     """
     import numpy as np
 
@@ -61,12 +67,12 @@ def smoke() -> int:
                 fab_name, backend="interp" if spatial else "sim", **kwargs)
             program = ual.Program.from_kernel(
                 SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports)
-            t0 = time.time()
+            t0 = time.perf_counter()
             exe = ual.compile(program, target, cache=cache)
-            t_cold = time.time() - t0
-            t0 = time.time()
+            t_cold = time.perf_counter() - t0
+            t0 = time.perf_counter()
             warm = ual.compile(program, target, cache=cache)
-            t_warm = time.time() - t0
+            t_warm = time.perf_counter() - t0
             fail = None if exe.success else "compile failed"
             if fail is None and spatial:
                 # spatial: no config to validate, but the analytic model and
@@ -91,6 +97,34 @@ def smoke() -> int:
     print("== smoke: one kernel per fabric, cache-cold then cache-warm ==")
     print(fmt_table(["kernel@fabric", "II", "cold", "warm", "check"], rows))
     print(f"cache: {cache.stats}")
+
+    # -- mini-DSE: 2 fabrics x 2 strategies through compile_many(workers=2)
+    sweep_json = None
+    with tempfile.TemporaryDirectory() as d:
+        sweep_cache = ual.MappingCache(disk_dir=d)
+        program = ual.Program.from_kernel(SMOKE_KERNEL)
+        space = {"fabric": [("hycube", dict(rows=4, cols=4)),
+                            ("n2n", dict(rows=4, cols=4))],
+                 "strategy": ["adaptive", "sa"]}
+        t0 = time.perf_counter()
+        report = ual.explore(program, space, workers=2, cache=sweep_cache)
+        t_sweep = time.perf_counter() - t0
+        rewarm = ual.explore(program, space, workers=2, cache=sweep_cache)
+        print(f"\n== smoke: 2x2 DSE mini-sweep via compile_many(workers=2), "
+              f"{t_sweep:.1f}s ==")
+        print(report.render())
+        if not all(p.success for p in report.points):
+            failures.append("dse sweep: point failed to map")
+        if sweep_cache.stats.stores != len(report.points):
+            failures.append(f"dse sweep: {sweep_cache.stats.stores} mappings "
+                            f"stored for {len(report.points)} unique points")
+        if rewarm.n_mapped != 0 or rewarm.n_warm != len(report.points):
+            failures.append("dse sweep: warm re-sweep paid mappings")
+        sweep_json = report.to_json()
+        sweep_json["rewarm_all_cached"] = rewarm.n_mapped == 0
+
+    save("smoke", {"fabrics": rows, "sweep": sweep_json,
+                   "failures": failures})
     for f in failures:
         print(f"FAIL {f}")
     return 1 if failures else 0
@@ -108,14 +142,14 @@ def main() -> None:
     names = [args.only] if args.only else list(BENCHES)
     failed = []
     for name in names:
-        t0 = time.time()
+        t0 = time.perf_counter()
         print(f"\n########## {name} ##########")
         payload = BENCHES[name]()
         claims = payload.get("claims", {})
         bad = [k for k, v in claims.items() if not v]
         if bad:
             failed.append((name, bad))
-        print(f"[{name}] done in {time.time() - t0:.1f}s"
+        print(f"[{name}] done in {time.perf_counter() - t0:.1f}s"
               + (f"  VIOLATED: {bad}" if bad else "  all claims hold"))
     print("\n================ SUMMARY ================")
     if failed:

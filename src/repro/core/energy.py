@@ -69,6 +69,24 @@ def efficiency_gops_w(vdd: float, util: float = 1.0,
     return gops / p_w if p_w > 0 else 0.0
 
 
+def point_efficiency_gops_w(n_ops: int, II: int, n_pes: int,
+                            vdd: float = 0.6,
+                            dynamic_gating: bool = True) -> float:
+    """GOPS/W of a mapped design point from its achieved II.
+
+    Utilization is ops issued per cycle over the array:
+    ``n_ops / (II * n_pes)`` — identical to the active-slot fraction
+    ``MachineConfig.utilization()`` reports for a temporal mapping, and
+    the natural generalization for the spatial analytic model (which has
+    no machine configuration to count slots in).  This is the efficiency
+    axis of the DSE Pareto report (``ual.explore``).
+    """
+    if II <= 0 or n_pes <= 0:
+        return 0.0
+    util = min(1.0, n_ops / (II * n_pes))
+    return efficiency_gops_w(vdd, util=util, dynamic_gating=dynamic_gating)
+
+
 def normalized_area(area_mm2: float, node_nm: float) -> float:
     return area_mm2 * (40.0 / node_nm)
 

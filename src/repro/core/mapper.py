@@ -7,10 +7,13 @@ Given a DFG and an ADL fabric, find the minimum-II modulo schedule:
      recurrence-cycle nodes prioritized by cycle length onto (FU, time)
      instances of the MRRG, routing every edge with Dijkstra; ports may be
      temporarily oversubscribed.
-  3. Oversubscription is resolved by (a) the SPR-inspired adaptive heuristic
-     that inflates the cost of overused resources between restarts, or
-     (b) simulated annealing that perturbs placements along a cooling
-     schedule.  A LISA-style label hook can bias placement candidates.
+  3. Oversubscription is resolved by a pluggable ``MapperStrategy`` — the
+     built-ins are (a) ``adaptive``, the SPR-inspired heuristic that
+     inflates the cost of overused resources between restarts, and
+     (b) ``sa``, simulated annealing that perturbs placements along a
+     cooling schedule.  Third parties add strategies with
+     ``register_strategy`` (also exported as ``ual.register_strategy``);
+     a LISA-style label hook can bias placement candidates.
 
 Success at an II yields a machine configuration (see `core/machine.py`).
 """
@@ -424,55 +427,146 @@ class ModuloMapper:
         return [rt for rts in self.value_routes.values() for rt in rts]
 
 
+# ---------------------------------------------------------------------------
+# Mapper strategies (pluggable registry)
+# ---------------------------------------------------------------------------
+
+class MapperStrategy:
+    """How one mapping attempt resolves resource oversubscription.
+
+    ``map_dfg`` owns the II search and the restart schedule; the strategy
+    owns what happens *within* one attempt (``attempt``) and how failure
+    feedback carries into the next restart (``adapt``).  Subclass and
+    register under a name to make it addressable from ``Target.strategy``::
+
+        class MyStrategy(MapperStrategy):
+            name = "mine"
+            def attempt(self, m):
+                return m.place_all() and not m.occ.overused()
+
+        register_strategy("mine", MyStrategy())
+    """
+
+    name: str = "?"
+
+    def attempt(self, m: "ModuloMapper") -> bool:
+        """Run one full mapping attempt on a fresh ``ModuloMapper`` whose
+        occupancy history was seeded by the previous ``adapt``; return True
+        when every node is placed and no resource is oversubscribed."""
+        raise NotImplementedError
+
+    def adapt(self, m: "ModuloMapper") -> Dict:
+        """Between restarts: return the occupancy history carried into the
+        next attempt (SPR-style cost inflation of overused resources by
+        default — subclasses may return ``{}`` to restart from scratch)."""
+        m.occ.bump_hist(m.occ.overused(), 1.0)
+        return m.occ.hist
+
+
+class AdaptiveStrategy(MapperStrategy):
+    """SPR-inspired: rely purely on inter-restart history cost inflation."""
+
+    name = "adaptive"
+
+    def attempt(self, m: "ModuloMapper") -> bool:
+        return m.place_all() and not m.occ.overused()
+
+
+class SAStrategy(MapperStrategy):
+    """Adaptive placement, then simulated-annealing polish of conflicts."""
+
+    name = "sa"
+
+    def __init__(self, max_iters: int = 400, t0: float = 3.0,
+                 t1: float = 0.05):
+        self.max_iters, self.t0, self.t1 = max_iters, t0, t1
+
+    def attempt(self, m: "ModuloMapper") -> bool:
+        if not m.place_all():
+            return False
+        if not m.occ.overused():
+            return True
+        return m.sa_polish(self.max_iters, self.t0, self.t1)
+
+
+MAPPER_STRATEGIES: Dict[str, MapperStrategy] = {}
+
+
+def register_strategy(name: str, strategy: MapperStrategy,
+                      overwrite: bool = False) -> None:
+    """Register a mapper strategy under ``name``.
+
+    Registering an existing name raises unless ``overwrite=True`` — silent
+    replacement is how two plugins stomp each other.
+    """
+    if name in MAPPER_STRATEGIES and not overwrite:
+        raise ValueError(f"strategy {name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    if not isinstance(strategy, MapperStrategy):
+        raise TypeError(f"strategy must be a core.mapper.MapperStrategy, "
+                        f"got {type(strategy).__name__}")
+    MAPPER_STRATEGIES[name] = strategy
+
+
+def get_strategy(name: str) -> MapperStrategy:
+    if name not in MAPPER_STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"registered: {sorted(MAPPER_STRATEGIES)}")
+    return MAPPER_STRATEGIES[name]
+
+
+def list_strategies() -> List[str]:
+    return sorted(MAPPER_STRATEGIES)
+
+
+register_strategy("adaptive", AdaptiveStrategy())
+register_strategy("sa", SAStrategy())
+
+
 def map_dfg(dfg: DFG, fabric: Fabric, ii_max: int = 48, seed: int = 0,
-            strategy: str = "adaptive", max_restarts: int = 8,
+            strategy="adaptive", max_restarts: int = 8,
             label_fn=None, time_budget_s: Optional[float] = 90.0) -> MapResult:
     """Map a DFG onto a fabric, minimizing II (paper's main toolchain entry).
 
-    Restart schedule: the full ``max_restarts`` adaptive-cost attempts are
-    spent at MII (where effort pays in II quality); higher IIs get fewer
-    attempts, and once ``time_budget_s`` is exceeded each II gets a single
-    attempt — bounding compile time the way a production scheduler must,
-    at the cost of a possibly +1..2 II on pathological kernels.
+    ``strategy`` is a registered name (see ``list_strategies``) or a
+    ``MapperStrategy`` instance.  Restart schedule: the full
+    ``max_restarts`` attempts are spent at MII (where effort pays in II
+    quality); higher IIs get fewer attempts, and once ``time_budget_s`` is
+    exceeded each II gets a single attempt — bounding compile time the way
+    a production scheduler must, at the cost of a possibly +1..2 II on
+    pathological kernels.
     """
-    t_start = time.time()
+    t_start = time.perf_counter()
+    strat = get_strategy(strategy) if isinstance(strategy, str) else strategy
+    sname = strategy if isinstance(strategy, str) else strat.name
     mii = compute_mii(dfg, fabric)
     restarts_total = 0
-    hist: Dict = {}
     for II in range(mii, ii_max + 1):
-        hist = {}
+        hist: Dict = {}
         if II == mii:
             attempts = max_restarts
         elif II <= mii + 2:
             attempts = max(2, max_restarts // 2)
         else:
             attempts = max(2, max_restarts // 4)
-        if time_budget_s is not None and time.time() - t_start > time_budget_s:
+        if time_budget_s is not None and \
+           time.perf_counter() - t_start > time_budget_s:
             attempts = 1
         for attempt in range(attempts):
             m = ModuloMapper(dfg, fabric, II, seed=seed * 1000 + attempt,
                              label_fn=label_fn)
             m.occ.hist = hist
-            ok = m.place_all()
             restarts_total += 1
-            if ok and not m.occ.overused():
+            if strat.attempt(m):
                 cfg = emit_config(dfg, fabric, II, m.placements, m.all_routes())
                 sched = max(t for (_, t) in m.placements.values()) + 1
                 return MapResult(True, II, mii, dict(m.placements), cfg,
                                  schedule_len=sched, restarts=restarts_total,
-                                 wall_s=time.time() - t_start,
-                                 strategy=strategy)
-            if ok and strategy == "sa" and m.sa_polish():
-                cfg = emit_config(dfg, fabric, II, m.placements, m.all_routes())
-                sched = max(t for (_, t) in m.placements.values()) + 1
-                return MapResult(True, II, mii, dict(m.placements), cfg,
-                                 schedule_len=sched, restarts=restarts_total,
-                                 wall_s=time.time() - t_start, strategy="sa")
-            # SPR-style adaptive: inflate history cost of overused resources
-            m.occ.bump_hist(m.occ.overused(), 1.0)
-            hist = m.occ.hist
+                                 wall_s=time.perf_counter() - t_start,
+                                 strategy=sname)
+            hist = strat.adapt(m)
     return MapResult(False, -1, mii, restarts=restarts_total,
-                     wall_s=time.time() - t_start, strategy=strategy)
+                     wall_s=time.perf_counter() - t_start, strategy=sname)
 
 
 # ---------------------------------------------------------------------------

@@ -8,34 +8,58 @@ software development".  This package is that layer::
 
     program = ual.Program.from_builder(b, n_iters=16)   # what to run
     target = ual.Target.from_name("hycube", rows=4, cols=4)  # where
-    exe = ual.compile(program, target)                  # cached mapping
+    exe = ual.compile(program, target)                  # cached pipeline
     out = exe.run(a=a, b=b)                             # dict in/out
     report = exe.validate(backends=("sim", "pallas"))   # vs the oracle
+
+    sweep = ual.explore(program, {                      # parallel DSE
+        "fabric": ["pace", ("hycube", dict(rows=4, cols=4))],
+        "strategy": ["adaptive", "sa"],
+    }, workers=4)
+    print(sweep.render())                               # Pareto report
 
 Vocabulary:
 
   * ``Program``  — DFG + scratchpad layout + named I/O spec, content-hashed,
   * ``Target``   — fabric + mapper strategy + backend name,
-  * ``compile``  — modulo mapping, memoized across processes by
+  * ``compile``  — the staged pass pipeline (layout -> MII bounds ->
+    mapping strategy -> validation binding; per-pass timings in
+    ``CompileInfo.passes``), memoized across processes by
     ``(program.digest, target.digest)``,
-  * ``Executable`` — ``run``/``run_batch``/``validate`` on any backend.
+  * ``Executable`` — ``run``/``run_batch``/``validate`` on any backend,
+  * ``compile_many``/``explore`` — grid compilation over a process pool
+    with cache-aware dedup, and the Pareto DSE front-end on top of it.
 
-Extension points: ``register_backend`` (interp/sim/pallas ship built-in)
-and ``register_fabric`` (hycube/n2n/pace/spatial/tpu_pod ship built-in).
+Extension points, all the same shape (named registry, duplicate names
+raise without ``overwrite=True``): ``register_backend``
+(interp/sim/pallas built-in), ``register_fabric``
+(hycube/n2n/pace/spatial/tpu_pod built-in) and ``register_strategy``
+(adaptive/sa built-in); enumerate with ``list_backends()`` /
+``list_fabrics()`` / ``list_strategies()``.
 """
+from repro.core.mapper import (MapperStrategy, list_strategies,
+                               register_strategy)
 from repro.ual.backends import (Backend, get_backend, list_backends,
                                 register_backend)
 from repro.ual.cache import (CACHE_VERSION, CacheStats, MappingCache,
                              default_cache, default_cache_dir,
                              set_default_cache)
 from repro.ual.compiler import compile
-from repro.ual.executable import CompileInfo, Executable
+from repro.ual.executable import CompileInfo, Executable, PassRecord
+from repro.ual.explore import (DesignPoint, ExploreReport, compile_many,
+                               explore)
+from repro.ual.pipeline import (CompileContext, CompilePass, Pipeline,
+                                default_pipeline)
 from repro.ual.program import Program
-from repro.ual.target import FABRICS, Target, register_fabric
+from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 
 __all__ = [
-    "Backend", "CACHE_VERSION", "CacheStats", "CompileInfo", "Executable",
-    "FABRICS", "MappingCache", "Program", "Target", "compile",
-    "default_cache", "default_cache_dir", "get_backend", "list_backends",
-    "register_backend", "register_fabric", "set_default_cache",
+    "Backend", "CACHE_VERSION", "CacheStats", "CompileContext",
+    "CompileInfo", "CompilePass", "DesignPoint", "Executable",
+    "ExploreReport", "FABRICS", "MapperStrategy", "MappingCache",
+    "PassRecord", "Pipeline", "Program", "Target", "compile",
+    "compile_many", "default_cache", "default_cache_dir",
+    "default_pipeline", "explore", "get_backend", "list_backends",
+    "list_fabrics", "list_strategies", "register_backend",
+    "register_fabric", "register_strategy", "set_default_cache",
 ]

@@ -93,6 +93,14 @@ class MappingCache:
         self.stats.misses += 1
         return None
 
+    def contains(self, key: Tuple[str, str]) -> bool:
+        """Whether ``get(key)`` would hit (either layer), without touching
+        the hit/miss counters — a peek for schedulers (``compile_many``)
+        deciding what still needs to be mapped."""
+        if key in self._mem:
+            return True
+        return self.disk_dir is not None and self._path(key).exists()
+
     def put(self, key: Tuple[str, str], result: MapResult, *,
             memory_only: bool = False) -> None:
         self._mem[key] = result

@@ -2,14 +2,20 @@
 
 One call replaces the hand-wired seven-step ritual
 (``DFGBuilder -> plan_layout -> apply_layout -> map_dfg -> flat_memory ->
-simulate -> unflatten_memory``) every consumer used to repeat:
+simulate -> unflatten_memory``) every consumer used to repeat.  It drives
+the staged pass pipeline in ``ual.pipeline``
+(layout -> MII bounds -> mapping strategy -> validation binding), so:
 
-  * temporal fabrics go through the modulo-scheduling mapper, memoized in
-    the mapping cache keyed on ``(program.digest, target.digest)`` — a
-    second compile of an identical pair pays zero mapper restarts,
+  * temporal fabrics go through a registered ``MapperStrategy``
+    (``adaptive``/``sa`` built-in, ``ual.register_strategy`` to extend),
+    memoized in the mapping cache keyed on
+    ``(program.digest, target.digest)`` — a second compile of an identical
+    pair pays zero mapper restarts,
   * spatial fabrics (no time multiplexing) go through the analytic
     ``spatial_ii`` model,
-  * mapping-free backends (``interp``) skip mapping entirely.
+  * mapping-free backends (``interp``) skip mapping entirely,
+  * every pass reports name / wall-time / stats into
+    ``CompileInfo.passes`` for tooling and the DSE front-end.
 
 The low-level functions remain importable from ``repro.core`` — this is a
 new stable surface, not a break.
@@ -19,61 +25,38 @@ from __future__ import annotations
 import time
 from typing import Optional
 
-from repro.core.mapper import MapResult, map_dfg, rec_mii, spatial_ii
+from repro.core.mapper import get_strategy
 from repro.ual.backends import get_backend
-from repro.ual.cache import MappingCache, default_cache
+from repro.ual.cache import MappingCache
 from repro.ual.executable import CompileInfo, Executable
+from repro.ual.pipeline import CompileContext, Pipeline, default_pipeline
 from repro.ual.program import Program
 from repro.ual.target import Target
 
 
 def compile(program: Program, target: Target, *,
             cache: Optional[MappingCache] = None,
-            use_cache: bool = True) -> Executable:
-    """Map ``program`` onto ``target`` (cached) and bind its backend.
+            use_cache: bool = True,
+            pipeline: Optional[Pipeline] = None) -> Executable:
+    """Run ``program`` through the compile pipeline for ``target``.
 
     ``cache=None`` uses the process-wide default (in-process dict backed by
     an on-disk pickle directory); ``use_cache=False`` forces a cold map and
     does not store the result.  Targets carrying a ``label_fn`` always
     compile cold: the hook is unhashable, so caching it would serve stale
-    placements.
+    placements.  ``pipeline`` swaps the default pass list for a custom one
+    (extra analysis passes, alternative mapping passes).
     """
-    t0 = time.time()
-    backend = get_backend(target.backend)     # fail fast on unknown names
-    if not backend.requires_config and target.fabric.temporal:
-        return Executable(program, target, None,
-                          CompileInfo(wall_s=time.time() - t0))
-
-    if not target.fabric.temporal:
-        ii, n_parts = spatial_ii(program.laid, target.fabric)
-        result = MapResult(True, ii, rec_mii(program.laid),
-                           strategy="spatial")
-        return Executable(program, target, result,
-                          CompileInfo(wall_s=time.time() - t0),
-                          spatial_subgraphs=n_parts)
-
-    key = (program.digest, target.digest)
-    cacheable = use_cache and target.label_fn is None
-    if cacheable:
-        c = cache if cache is not None else default_cache()
-        result = c.get(key)
-        if result is not None:
-            return Executable(program, target, result,
-                              CompileInfo(cache_hit=True, mapper_restarts=0,
-                                          wall_s=time.time() - t0, key=key))
-    result = map_dfg(program.laid, target.fabric, ii_max=target.ii_max,
-                     seed=target.seed, strategy=target.strategy,
-                     max_restarts=target.max_restarts,
-                     label_fn=target.label_fn,
-                     time_budget_s=target.time_budget_s)
-    if cacheable:
-        # failures are cached too — re-paying the full restart schedule on
-        # every compile of a known-unmappable pair would defeat the cache
-        # where mapping is most expensive — but only in-process: the time
-        # budget makes failure wall-clock dependent, so a failure observed
-        # on a loaded machine must not be pinned on disk
-        c.put(key, result, memory_only=not result.success)
-    return Executable(program, target, result,
-                      CompileInfo(cache_hit=False,
-                                  mapper_restarts=result.restarts,
-                                  wall_s=time.time() - t0, key=key))
+    t0 = time.perf_counter()
+    backend = get_backend(target.backend)   # fail fast on unknown names
+    if target.fabric.temporal and backend.requires_config:
+        get_strategy(target.strategy)       # ...and unknown strategies
+    ctx = CompileContext(program, target, cache=cache, use_cache=use_cache,
+                         backend=backend)
+    (pipeline if pipeline is not None else default_pipeline()).run(ctx)
+    info = CompileInfo(cache_hit=ctx.cache_hit,
+                       mapper_restarts=ctx.restarts_paid,
+                       wall_s=time.perf_counter() - t0, key=ctx.key,
+                       passes=list(ctx.records))
+    return Executable(program, target, ctx.result, info,
+                      spatial_subgraphs=ctx.spatial_subgraphs)

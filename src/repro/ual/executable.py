@@ -25,11 +25,30 @@ from repro.ual.target import Target
 
 
 @dataclass
+class PassRecord:
+    """One pipeline pass's report: what ran, how long, what it found."""
+
+    name: str
+    wall_s: float = 0.0
+    stats: Dict[str, object] = field(default_factory=dict)
+
+    def __str__(self) -> str:
+        kv = ", ".join(f"{k}={v}" for k, v in self.stats.items())
+        return f"{self.name}: {self.wall_s * 1e3:.2f}ms ({kv})"
+
+
+@dataclass
 class CompileInfo:
     cache_hit: bool = False
     mapper_restarts: int = 0      # restarts paid by THIS compile (0 on hit)
     wall_s: float = 0.0
     key: Optional[Tuple[str, str]] = None
+    passes: List[PassRecord] = field(default_factory=list)
+
+    @property
+    def pass_times(self) -> Dict[str, float]:
+        """Per-pass wall seconds keyed by pass name (pipeline order)."""
+        return {p.name: p.wall_s for p in self.passes}
 
 
 @dataclass

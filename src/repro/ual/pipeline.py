@@ -1,0 +1,182 @@
+"""The staged compile pipeline behind ``ual.compile``.
+
+``compile()`` used to be one opaque function; it is now a sequence of
+instrumented passes, each timed with ``time.perf_counter`` and reporting a
+``PassRecord(name, wall_s, stats)`` into ``CompileInfo.passes``:
+
+  * ``layout``   — fold the planned scratchpad layout into the DFG
+    (base addresses into LOAD/STOREs),
+  * ``mii``      — Rau's iterative-modulo-scheduling lower bounds
+    (ResMII / RecMII),
+  * ``mapping``  — cache lookup, then the registered ``MapperStrategy``
+    for temporal fabrics / the analytic ``spatial_ii`` model for spatial
+    ones; mapping-free backends skip this pass,
+  * ``binding``  — bind the execution backend and record whether the
+    result is runnable / validatable.
+
+The pass list is data, not control flow: tooling can build a custom
+``Pipeline`` (extra analysis passes, alternative mapping passes) and hand
+it to ``compile(..., pipeline=...)`` without forking the compiler.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.mapper import (MapResult, map_dfg, rec_mii, res_mii,
+                               spatial_ii)
+from repro.ual.backends import Backend
+from repro.ual.cache import MappingCache, default_cache
+from repro.ual.executable import PassRecord
+from repro.ual.program import Program
+from repro.ual.target import Target
+
+
+@dataclass
+class CompileContext:
+    """Mutable state threaded through the passes of one compile."""
+
+    program: Program
+    target: Target
+    cache: Optional[MappingCache] = None
+    use_cache: bool = True
+    backend: Optional[Backend] = None
+    # -- filled in by passes --------------------------------------------------
+    rec: Optional[int] = None            # RecMII
+    res: Optional[int] = None            # ResMII
+    mii: Optional[int] = None
+    result: Optional[MapResult] = None   # None for mapping-free backends
+    spatial_subgraphs: int = 0
+    cache_hit: bool = False
+    restarts_paid: int = 0               # mapper restarts paid by THIS compile
+    key: Optional[Tuple[str, str]] = None
+    records: List[PassRecord] = field(default_factory=list)
+
+
+class CompilePass:
+    """One pipeline stage: mutate the context, return stats to report."""
+
+    name: str = "?"
+
+    def run(self, ctx: CompileContext) -> Optional[Dict[str, object]]:
+        raise NotImplementedError
+
+
+class LayoutPass(CompilePass):
+    """Apply the planned scratchpad layout (``Program.laid``)."""
+
+    name = "layout"
+
+    def run(self, ctx):
+        laid = ctx.program.laid
+        return {"n_nodes": len(laid.nodes),
+                "n_arrays": len(ctx.program.arrays),
+                "n_banks": ctx.program.layout.n_banks}
+
+
+class MIIBoundsPass(CompilePass):
+    """Rau's lower bounds: RecMII always, ResMII for temporal fabrics."""
+
+    name = "mii"
+
+    def run(self, ctx):
+        laid, fabric = ctx.program.laid, ctx.target.fabric
+        ctx.rec = rec_mii(laid)
+        ctx.res = res_mii(laid, fabric)
+        ctx.mii = max(ctx.rec, ctx.res)
+        return {"rec_mii": ctx.rec, "res_mii": ctx.res, "mii": ctx.mii}
+
+
+class MappingPass(CompilePass):
+    """Cache lookup + strategy dispatch (the expensive pass).
+
+    Temporal fabrics resolve ``target.strategy`` through the mapper
+    strategy registry; spatial fabrics use the analytic ``spatial_ii``
+    model; mapping-free backends (``interp``) skip mapping entirely.
+    Results are memoized per ``(program.digest, target.digest)`` —
+    failures only in-process (``memory_only``): the time budget makes
+    failure wall-clock dependent, so a failure observed on a loaded
+    machine must never be pinned on disk for other processes to inherit.
+    """
+
+    name = "mapping"
+
+    def run(self, ctx):
+        target = ctx.target
+        if not target.fabric.temporal:
+            ii, n_parts = spatial_ii(ctx.program.laid, target.fabric)
+            ctx.result = MapResult(True, ii, ctx.rec, strategy="spatial")
+            ctx.spatial_subgraphs = n_parts
+            return {"model": "spatial_ii", "II": ii, "subgraphs": n_parts}
+        if ctx.backend is not None and not ctx.backend.requires_config:
+            return {"skipped": "mapping-free backend"}
+
+        key = (ctx.program.digest, target.digest)
+        ctx.key = key
+        # targets carrying a label_fn always compile cold: the hook is
+        # unhashable, so caching it would serve stale placements
+        cacheable = ctx.use_cache and target.label_fn is None
+        c = None
+        if cacheable:
+            c = ctx.cache if ctx.cache is not None else default_cache()
+            result = c.get(key)
+            if result is not None:
+                ctx.result = result
+                ctx.cache_hit = True
+                return {"cache": "hit", "strategy": result.strategy,
+                        "II": result.II, "success": result.success}
+        result = map_dfg(ctx.program.laid, target.fabric,
+                         ii_max=target.ii_max, seed=target.seed,
+                         strategy=target.strategy,
+                         max_restarts=target.max_restarts,
+                         label_fn=target.label_fn,
+                         time_budget_s=target.time_budget_s)
+        ctx.restarts_paid = result.restarts
+        if cacheable:
+            c.put(key, result, memory_only=not result.success)
+        ctx.result = result
+        return {"cache": "miss" if cacheable else "bypass",
+                "strategy": result.strategy, "II": result.II,
+                "restarts": result.restarts, "success": result.success}
+
+
+class BindingPass(CompilePass):
+    """Validation binding: tie the backend to the mapping artifacts.
+
+    Records whether the executable can actually run (a config exists when
+    the backend needs one) and whether ``validate()`` has an oracle path —
+    surfacing at compile time what would otherwise only show up as a
+    ``RuntimeError`` at ``run()`` time.
+    """
+
+    name = "binding"
+
+    def run(self, ctx):
+        be, r = ctx.backend, ctx.result
+        needs = be.requires_config if be is not None else True
+        runnable = (not needs) or (r is not None and r.success
+                                   and r.config is not None)
+        return {"backend": ctx.target.backend, "requires_config": needs,
+                "runnable": runnable,
+                "validatable": runnable and ctx.target.backend != "interp"}
+
+
+@dataclass
+class Pipeline:
+    """An ordered pass list; ``run`` times each pass into the context."""
+
+    passes: List[CompilePass]
+
+    def run(self, ctx: CompileContext) -> CompileContext:
+        for p in self.passes:
+            t0 = time.perf_counter()
+            stats = p.run(ctx)
+            ctx.records.append(
+                PassRecord(p.name, time.perf_counter() - t0, stats or {}))
+        return ctx
+
+
+def default_pipeline() -> Pipeline:
+    return Pipeline([LayoutPass(), MIIBoundsPass(), MappingPass(),
+                     BindingPass()])

@@ -26,11 +26,26 @@ FABRICS: Dict[str, Callable[..., Fabric]] = dict(FABRIC_BUILDERS)
 
 def register_fabric(name: str, builder: Callable[..., Fabric],
                     overwrite: bool = False) -> None:
-    """Add a fabric builder to the registry (third-party extension point)."""
+    """Register a fabric builder under ``name``.
+
+    Registering an existing name raises unless ``overwrite=True`` — silent
+    replacement is how two plugins stomp each other.  ``builder`` is any
+    callable returning a ``Fabric`` (``Target.from_name`` forwards its
+    non-knob keyword arguments to it); the ADL builders
+    ``hycube``/``n2n``/``pace``/``spatial``/``tpu_pod`` ship built-in.
+    """
     if name in FABRICS and not overwrite:
         raise ValueError(f"fabric {name!r} already registered; "
                          f"pass overwrite=True to replace it")
+    if not callable(builder):
+        raise TypeError(f"builder must be callable, "
+                        f"got {type(builder).__name__}")
     FABRICS[name] = builder
+
+
+def list_fabrics() -> list:
+    """Sorted names of all registered fabric builders."""
+    return sorted(FABRICS)
 
 
 @dataclass(frozen=True)

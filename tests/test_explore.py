@@ -1,0 +1,322 @@
+"""Pass-pipeline compiler + pluggable strategies + parallel DSE front-end.
+
+The redesigned compile path under test:
+
+  * ``compile()`` is a staged pipeline — layout -> MII bounds -> mapping
+    strategy -> validation binding — and every pass reports
+    name/wall-time/stats into ``CompileInfo.passes``,
+  * mapper strategies resolve through a registry with the same contract
+    as backends/fabrics (duplicates raise, unknown names raise with the
+    known set, custom registrations are honored end-to-end),
+  * the spatial-fabric compile path and failure-caching semantics
+    (``memory_only``: a failure never persists to disk),
+  * ``compile_many``/``explore`` dedup by digest, fan cold work over a
+    process pool, and report II / per-pass timings / GOPS/W per point.
+"""
+import numpy as np
+import pytest
+
+from repro import ual
+from repro.core.adl import hycube, spatial
+from repro.core.mapper import AdaptiveStrategy, spatial_ii
+
+PASS_NAMES = ["layout", "mii", "mapping", "binding"]
+
+
+# ---------------------------------------------------------------------------
+# pass pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_pass_records_cold_and_warm(tmp_path):
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    target = ual.Target.from_name("hycube", rows=4, cols=4)
+
+    cold = ual.compile(program, target, cache=cache)
+    assert [p.name for p in cold.compile_info.passes] == PASS_NAMES
+    assert all(p.wall_s >= 0 for p in cold.compile_info.passes)
+    by_name = {p.name: p.stats for p in cold.compile_info.passes}
+    assert by_name["layout"]["n_nodes"] == len(program.laid.nodes)
+    assert by_name["mii"]["mii"] == max(by_name["mii"]["rec_mii"],
+                                        by_name["mii"]["res_mii"])
+    assert by_name["mapping"]["cache"] == "miss"
+    assert by_name["mapping"]["II"] == cold.II >= by_name["mii"]["mii"]
+    assert by_name["binding"] == {"backend": "sim", "requires_config": True,
+                                  "runnable": True, "validatable": True}
+    # the mapping pass dominates a cold compile's wall time
+    times = cold.compile_info.pass_times
+    assert set(times) == set(PASS_NAMES)
+    assert times["mapping"] > sum(v for k, v in times.items()
+                                  if k != "mapping")
+
+    warm = ual.compile(program, target, cache=cache)
+    wstats = {p.name: p.stats for p in warm.compile_info.passes}
+    assert wstats["mapping"]["cache"] == "hit"
+    assert warm.compile_info.cache_hit
+
+
+def test_pipeline_skips_mapping_for_mapping_free_backend():
+    program = ual.Program.from_kernel("gemm")
+    exe = ual.compile(program, ual.Target(hycube(4, 4), backend="interp"))
+    stats = {p.name: p.stats for p in exe.compile_info.passes}
+    assert stats["mapping"] == {"skipped": "mapping-free backend"}
+    assert exe.map_result is None and exe.success
+    assert stats["binding"]["requires_config"] is False
+
+
+def test_custom_pipeline_pass_list():
+    """The pass list is data: a custom pipeline (extra analysis pass) runs
+    through the same compile() entry without forking the compiler."""
+    seen = {}
+
+    class CountOpsPass(ual.CompilePass):
+        name = "count_ops"
+
+        def run(self, ctx):
+            seen["ops"] = len(ctx.program.laid.nodes)
+            return {"n_ops": seen["ops"]}
+
+    pipe = ual.default_pipeline()
+    pipe.passes.insert(2, CountOpsPass())
+    program = ual.Program.from_kernel("gemm")
+    exe = ual.compile(program, ual.Target(hycube(4, 4)), pipeline=pipe,
+                      use_cache=False)
+    assert exe.success
+    assert [p.name for p in exe.compile_info.passes] == \
+        ["layout", "mii", "count_ops", "mapping", "binding"]
+    assert seen["ops"] == len(program.laid.nodes)
+
+
+# ---------------------------------------------------------------------------
+# spatial-fabric compile path
+# ---------------------------------------------------------------------------
+
+def test_spatial_compile_path_matches_analytic_model():
+    program = ual.Program.from_kernel("gemm")
+    fab = spatial(4, 4)
+    exe = ual.compile(program, ual.Target(fab, backend="interp"))
+    ii, n_parts = spatial_ii(program.laid, fab)
+    assert exe.success and exe.II == ii
+    assert exe.spatial_subgraphs == n_parts >= 1
+    assert exe.map_result.strategy == "spatial"
+    stats = {p.name: p.stats for p in exe.compile_info.passes}
+    assert stats["mapping"] == {"model": "spatial_ii", "II": ii,
+                                "subgraphs": n_parts}
+    assert exe.map_result.mii == stats["mii"]["rec_mii"]
+    assert stats["binding"]["runnable"] is True    # interp needs no config
+    # spatial mappings produce no machine configuration -> a config-requiring
+    # backend is not runnable, and the binding pass says so up front
+    on_sim = ual.compile(program, ual.Target(fab, backend="sim"))
+    sim_stats = {p.name: p.stats for p in on_sim.compile_info.passes}
+    assert sim_stats["binding"]["runnable"] is False
+
+
+def test_spatial_target_never_enters_cache(tmp_path):
+    """The analytic model is microseconds — caching it would only risk
+    staleness.  Spatial compiles must not touch the mapping cache."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    ual.compile(program, ual.Target(spatial(4, 4), backend="interp"),
+                cache=cache)
+    assert len(cache) == 0
+    assert cache.stats.misses == cache.stats.stores == 0
+
+
+# ---------------------------------------------------------------------------
+# strategy registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_strategies_listed():
+    assert {"adaptive", "sa"} <= set(ual.list_strategies())
+    assert "hycube" in ual.list_fabrics()
+    assert {"interp", "sim", "pallas"} <= set(ual.list_backends())
+
+
+def test_unknown_strategy_raises_with_known_set():
+    program = ual.Program.from_kernel("gemm")
+    with pytest.raises(KeyError, match="unknown strategy 'ilp'.*adaptive"):
+        ual.compile(program, ual.Target(hycube(4, 4), strategy="ilp"))
+
+
+def test_duplicate_strategy_registration_raises():
+    ual.register_strategy("dup_test_strategy", AdaptiveStrategy())
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            ual.register_strategy("dup_test_strategy", AdaptiveStrategy())
+        ual.register_strategy("dup_test_strategy", AdaptiveStrategy(),
+                              overwrite=True)
+        assert "dup_test_strategy" in ual.list_strategies()
+    finally:
+        from repro.core.mapper import MAPPER_STRATEGIES
+        MAPPER_STRATEGIES.pop("dup_test_strategy", None)
+
+
+def test_strategy_must_subclass_mapper_strategy():
+    with pytest.raises(TypeError, match="must be a core.mapper"):
+        ual.register_strategy("broken", lambda m: True)
+
+
+def test_custom_strategy_end_to_end(tmp_path):
+    """A registered strategy is addressable from Target.strategy, runs the
+    mapping, tags the MapResult, and keys the cache under its own name."""
+    calls = {"n": 0}
+
+    class CountingStrategy(ual.MapperStrategy):
+        name = "counting_test"
+
+        def attempt(self, m):
+            calls["n"] += 1
+            return m.place_all() and not m.occ.overused()
+
+    ual.register_strategy("counting_test", CountingStrategy())
+    try:
+        cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+        program = ual.Program.from_kernel("gemm")
+        base = ual.Target(hycube(4, 4))
+        custom = ual.Target(hycube(4, 4), strategy="counting_test")
+        assert base.digest != custom.digest        # strategy is mapper state
+        exe = ual.compile(program, custom, cache=cache)
+        assert exe.success and calls["n"] >= 1
+        assert exe.map_result.strategy == "counting_test"
+        assert ual.compile(program, custom, cache=cache).compile_info.cache_hit
+    finally:
+        from repro.core.mapper import MAPPER_STRATEGIES
+        MAPPER_STRATEGIES.pop("counting_test", None)
+
+
+# ---------------------------------------------------------------------------
+# failure caching (memory_only semantics)
+# ---------------------------------------------------------------------------
+
+def test_failure_cached_in_memory_never_on_disk(tmp_path):
+    """``put(memory_only=True)`` is the failure path: served in-process,
+    invisible to the disk layer, retried after clear_memory()."""
+    from repro.core.mapper import MapResult
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    fail = MapResult(False, -1, 3, restarts=7)
+    cache.put(("p", "t"), fail, memory_only=True)
+    assert cache.contains(("p", "t"))
+    assert cache.get(("p", "t")).restarts == 7
+    assert not list((tmp_path / "ual").glob("*.pkl"))
+    cache.clear_memory()
+    assert not cache.contains(("p", "t"))          # a new process must retry
+    assert cache.get(("p", "t")) is None
+
+    ok = MapResult(True, 4, 4)
+    cache.put(("p2", "t2"), ok, memory_only=False)
+    assert list((tmp_path / "ual").glob("*.pkl"))  # successes do persist
+    cache.clear_memory()
+    assert cache.contains(("p2", "t2"))
+
+
+def test_compile_many_failure_stays_off_disk(tmp_path):
+    """A grid containing an unmappable point: the pool maps it once, the
+    failure is memoized in-process only, and the executable reports it."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    good = ual.Target.from_name("hycube", rows=4, cols=4)
+    bad = ual.Target(hycube(2, 2), ii_max=1, max_restarts=1)  # can't fit
+    exes = ual.compile_many([(program, good), (program, bad),
+                             (program, bad)], workers=2, cache=cache)
+    assert exes[0].success
+    assert not exes[1].success and not exes[2].success
+    assert exes[2].compile_info.cache_hit          # dedup'd, not re-mapped
+    pkls = list((tmp_path / "ual").glob("*.pkl"))
+    assert len(pkls) == 1                          # only the success persisted
+
+
+# ---------------------------------------------------------------------------
+# compile_many / explore
+# ---------------------------------------------------------------------------
+
+def test_compile_many_dedups_and_orders(tmp_path):
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    t_hyc = ual.Target.from_name("hycube", rows=4, cols=4)
+    t_n2n = ual.Target.from_name("n2n", rows=4, cols=4)
+    pairs = [(program, t_hyc), (program, t_n2n),
+             (program, t_hyc.with_backend("pallas")),   # same digest as [0]
+             (program, t_hyc)]                          # exact duplicate
+    exes = ual.compile_many(pairs, workers=2, cache=cache)
+    assert [e.success for e in exes] == [True] * 4
+    # two unique digests -> exactly two mappings paid, two warm hits
+    assert cache.stats.stores == 2
+    assert [e.compile_info.cache_hit for e in exes] == \
+        [False, False, True, True]
+    assert exes[0].compile_info.mapper_restarts >= 1
+    assert exes[0].II == exes[2].II == exes[3].II
+    # pool-mapped executables carry true mapping cost in their pass record
+    stats = {p.name: p.stats for p in exes[0].compile_info.passes}
+    assert stats["mapping"]["cache"] == "pool"
+    # results identical to an in-process compile of the same pair
+    mem = program.random_inputs(np.random.default_rng(0))
+    out_pool = exes[0].run(mem)
+    out_seq = ual.compile(program, t_hyc, use_cache=False).run(mem)
+    for name in program.outputs:
+        np.testing.assert_array_equal(out_pool[name], out_seq[name])
+
+
+def test_compile_many_mixed_grid_serial_paths(tmp_path):
+    """Spatial fabrics and mapping-free backends can't fan out — they
+    compile serially through the same pipeline, in input order."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    pairs = [(program, ual.Target.from_name("spatial", backend="interp")),
+             (program, ual.Target(hycube(4, 4), backend="interp")),
+             (program, ual.Target.from_name("hycube", rows=4, cols=4))]
+    exes = ual.compile_many(pairs, workers=2, cache=cache)
+    assert exes[0].spatial_subgraphs >= 1
+    assert exes[1].map_result is None
+    assert exes[2].map_result.config is not None
+    assert cache.stats.stores == 1                 # only the temporal mapping
+
+
+def test_explore_report_pareto_and_zero_redundancy(tmp_path):
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    space = {"fabric": [("hycube", dict(rows=4, cols=4)),
+                        ("n2n", dict(rows=4, cols=4))],
+             "strategy": ["adaptive", "sa"]}
+    report = ual.explore(program, space, workers=2, cache=cache)
+    assert len(report.points) == 4
+    assert all(p.success for p in report.points)
+    for p in report.points:
+        assert p.II >= 1 and p.gops_w > 0
+        assert set(p.pass_times) == set(PASS_NAMES)
+    assert report.n_mapped == 4 == cache.stats.stores
+    assert report.pareto and set(report.pareto) <= set(report.points)
+    # no point on the frontier is dominated by another point
+    for p in report.pareto:
+        for q in report.points:
+            assert not (q.II <= p.II and q.mapper_wall_s <= p.mapper_wall_s
+                        and q.gops_w >= p.gops_w
+                        and (q.II, q.mapper_wall_s, q.gops_w)
+                        != (p.II, p.mapper_wall_s, p.gops_w))
+    rendered = report.render()
+    assert "hycube_4x4" in rendered and "Pareto" in rendered
+    assert report.to_json()["points"][0]["II"] == report.points[0].II
+
+    # warm re-sweep over the same cache: zero mappings paid
+    again = ual.explore(program, space, workers=2, cache=cache)
+    assert again.n_mapped == 0 and again.n_warm == len(again.points)
+    assert [p.II for p in again.points] == [p.II for p in report.points]
+
+
+def test_explore_rejects_bad_space():
+    program = ual.Program.from_kernel("gemm")
+    with pytest.raises(ValueError, match="'fabric' axis"):
+        ual.explore(program, {"strategy": ["adaptive"]})
+    with pytest.raises(ValueError, match="unknown space axes"):
+        ual.explore(program, {"fabric": ["hycube"], "rows": [4]})
+    with pytest.raises(KeyError, match="unknown fabric 'fpga'"):
+        ual.explore(program, {"fabric": ["fpga"]})
+    with pytest.raises(ValueError, match="design space is empty"):
+        ual.explore(program, {"fabric": ["hycube"], "strategy": []})
+
+
+def test_explore_accepts_bare_string_axes(tmp_path):
+    """A scalar string for strategy/backend means one value, not its chars."""
+    from repro.ual.explore import space_targets
+    targets = space_targets({"fabric": ["hycube"], "strategy": "sa",
+                             "backend": "interp"})
+    assert [(t.strategy, t.backend) for t, _ in targets] == [("sa", "interp")]
