@@ -35,12 +35,16 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
             "energy_gated_pj": e_on["total"],
             "energy_ungated_pj": e_off["total"],
             "savings_pct": (1 - e_on["total"] / e_off["total"]) * 100,
+            # the configs being priced are correct: one batched sweep each
+            "validated": exe.validate(seed=seed, n_vectors=2).passed,
         }
     claims = {
         "cm_dominates_power": POWER_SPLIT["cm"] == max(POWER_SPLIT.values()),
         "cm_area_modest": AREA_SPLIT_CGRA["cm"] < AREA_SPLIT_CGRA["pe_logic"],
         "gating_saves_about_10pct": all(
             4.0 <= g["savings_pct"] <= 20.0 for g in gating.values()),
+        "priced_configs_validate": all(g["validated"]
+                                       for g in gating.values()),
     }
     payload = {"area_soc": AREA_SPLIT_SOC, "area_cgra": AREA_SPLIT_CGRA,
                "power_cgra": POWER_SPLIT, "gating": gating, "claims": claims}

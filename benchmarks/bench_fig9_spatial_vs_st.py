@@ -29,9 +29,14 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
         st = ual.compile(program, tgt_st)
         sp = ual.compile(program, tgt_sp)
         ii_st = st.II if st.success else -1
+        # one batched engine sweep validates the ST config we report
+        # (spatial targets are mapping-free interp: nothing to validate)
+        checked = (st.validate(seed=seed, n_vectors=2).passed
+                   if st.success else None)
         data[name] = {"st_ii": ii_st, "spatial_ii": sp.II,
                       "spatial_subgraphs": sp.spatial_subgraphs,
-                      "nodes": len(program.dfg.nodes)}
+                      "nodes": len(program.dfg.nodes),
+                      "st_validated": checked}
         rows.append([name, len(program.dfg.nodes), ii_st, sp.II,
                      sp.spatial_subgraphs])
     # the paper's claim is over ITS benchmark set — all too large to fit

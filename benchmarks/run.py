@@ -8,10 +8,11 @@ paper claim is violated.
 
 ``--smoke`` skips the full benches and instead compiles one kernel per
 registered temporal fabric through the UAL, cache-cold then cache-warm,
-then runs a 2-fabric x 2-strategy mini-sweep through
-``compile_many(workers=2)`` — a fast regression gate for the toolchain,
-mapping cache and DSE front-end (used by CI, which uploads the resulting
-``artifacts/bench/smoke.json``).
+runs a B=16 batched-sim throughput check off the shared lowered artifact
+(oracle parity + nonzero samples/s), then a 2-fabric x 2-strategy
+mini-sweep through ``compile_many(workers=2)`` — a fast regression gate
+for the toolchain, mapping cache, execution engines and DSE front-end
+(used by CI, which uploads the resulting ``artifacts/bench/smoke.json``).
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ import sys
 import tempfile
 import time
 
-from benchmarks import (bench_dse, bench_fig9_spatial_vs_st,
+from benchmarks import (bench_dse, bench_exec, bench_fig9_spatial_vs_st,
                         bench_fig10_voltage, bench_fig11_breakdown,
                         bench_roofline, bench_table2_validation,
                         bench_table3_multihop, bench_table4_efficiency)
@@ -35,6 +36,7 @@ BENCHES = {
     "fig11_breakdown": bench_fig11_breakdown.run,
     "roofline": bench_roofline.run,
     "dse_explore": bench_dse.run,
+    "exec_throughput": bench_exec.run,
 }
 
 SMOKE_TARGETS = (
@@ -47,11 +49,13 @@ SMOKE_KERNEL = "gemm"
 
 
 def smoke() -> int:
-    """Compile one kernel per fabric (cold + warm), validate on sim, then
-    mini-sweep 2 fabrics x 2 strategies through ``compile_many(workers=2)``.
+    """Compile one kernel per fabric (cold + warm), validate on sim, run a
+    B=16 batched-sim throughput check, then mini-sweep 2 fabrics x
+    2 strategies through ``compile_many(workers=2)``.
 
     Exit non-zero if any compile fails, any validation mismatches, the
-    warm compile misses the cache, or the sweep pays redundant mappings.
+    warm compile misses the cache, the batched engine loses oracle parity
+    or reports zero throughput, or the sweep pays redundant mappings.
     Writes ``artifacts/bench/smoke.json`` (uploaded by CI).
     """
     import numpy as np
@@ -98,6 +102,38 @@ def smoke() -> int:
     print(fmt_table(["kernel@fabric", "II", "cold", "warm", "check"], rows))
     print(f"cache: {cache.stats}")
 
+    # -- batched-sim throughput gate: one kernel, B=16, vectorized engine
+    # off the shared lowered artifact; parity with the oracle + nonzero
+    # samples/s, so the lower-once/run-many path can't silently regress
+    batched_json = None
+    with tempfile.TemporaryDirectory() as d:
+        bcache = ual.MappingCache(disk_dir=d)
+        target = ual.Target.from_name("hycube", rows=4, cols=4)
+        program = ual.Program.from_kernel(
+            SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports)
+        exe = ual.compile(program, target, cache=bcache)
+        B = 16
+        ok = exe.success and exe.lowered is not None
+        if not ok:
+            failures.append("batched sim: compile/lowering failed")
+        else:
+            rep = exe.validate(seed=0, backends=("sim",), n_vectors=B)
+            rng = np.random.default_rng(1)
+            exe.run_batch([program.random_inputs(rng) for _ in range(B)])
+            sps = exe.last_info.get("throughput_sps", 0.0)
+            if not rep.passed:
+                failures.append("batched sim: oracle parity mismatch")
+            if not sps > 0:
+                failures.append("batched sim: zero throughput reported")
+            if bcache.stats.lowered_stores != 1:
+                failures.append("batched sim: expected exactly one lowering")
+            batched_json = {"B": B, "parity": rep.passed,
+                            "throughput_sps": round(float(sps), 1),
+                            "relowered": bcache.stats.lowered_stores != 1}
+            print(f"\n== smoke: batched sim B={B} on the lowered artifact: "
+                  f"{batched_json['throughput_sps']} samples/s, "
+                  f"parity={'ok' if rep.passed else 'FAIL'} ==")
+
     # -- mini-DSE: 2 fabrics x 2 strategies through compile_many(workers=2)
     sweep_json = None
     with tempfile.TemporaryDirectory() as d:
@@ -124,7 +160,7 @@ def smoke() -> int:
         sweep_json["rewarm_all_cached"] = rewarm.n_mapped == 0
 
     save("smoke", {"fabrics": rows, "sweep": sweep_json,
-                   "failures": failures})
+                   "batched_sim": batched_json, "failures": failures})
     for f in failures:
         print(f"FAIL {f}")
     return 1 if failures else 0

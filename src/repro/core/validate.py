@@ -28,6 +28,9 @@ class ValidationReport:
     sim_stats: Optional[SimStats] = None
     mismatches: int = 0
     backend_results: Optional[Dict[str, bool]] = field(default=None)
+    #: how many random test vectors were swept (one natively-batched run
+    #: per backend — see ``Executable.validate``)
+    n_vectors: int = 1
 
     def __str__(self) -> str:
         status = "PASS" if self.passed else "FAIL"

@@ -29,9 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.lowering import (K_CONST, K_NONE, K_O, K_R, K_RESULT,
+                                 LinkedConfig)
 from repro.core.machine import OPC
-from repro.kernels.cgra_exec.linking import (K_CONST, K_NONE, K_O, K_R,
-                                             K_RESULT, LinkedConfig)
 
 I32 = jnp.int32
 

@@ -1,122 +1,15 @@
-"""Host-side "linker": resolve a MachineConfig's static routes to dense tables.
+"""Compatibility shim: the "linker" is now the shared lowering pass.
 
-HyCUBE's central claim is that the interconnect is *compiler-scheduled*:
-crossbar settings are static per II-slot, so a single-cycle multi-hop path
-is a fixed combinational chain.  On TPU we exploit exactly that property —
-every wire chain is resolved AT LINK TIME into a direct (source PE, source
-register) select, so the Pallas kernel never routes dynamically: operand
-fetch becomes a static gather over the PE-output / register state, which
-is the TPU-native analogue of the clockless-repeater bypass.
-
-Linked operand/source kinds (values in the dense tables):
-  K_NONE   = 0 — absent operand
-  K_O      = 1 — previous-cycle output latch of PE ``pe``
-  K_R      = 2 — register ``reg`` of PE ``pe`` (previous-cycle value)
-  K_CONST  = 3 — the instruction immediate
-  K_RESULT = 4 — current-cycle ALU result of own PE (register writes only)
+The dense-table construction that used to live here is the single source
+of truth in ``repro.core.lowering`` — the same lowered artifact drives
+the Pallas ``cgra_exec`` kernel, the vectorized batched simulator and the
+``ual`` compile pipeline's ``lowering`` pass.  This module re-exports the
+public names so existing imports keep working.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple
+from repro.core.lowering import (K_CONST, K_NONE, K_O, K_R, K_RESULT,
+                                 LinkedConfig, link_config)
 
-import numpy as np
-
-from repro.core.machine import (MachineConfig, OPC, SRC_CONST, SRC_IN,
-                                SRC_NONE, SRC_REG, SRC_SELF, XB_IN, XB_NONE,
-                                XB_O, XB_REG)
-
-K_NONE, K_O, K_R, K_CONST, K_RESULT = 0, 1, 2, 3, 4
-
-
-@dataclass
-class LinkedConfig:
-    """Dense int32 tables driving the cgra_exec kernel (CM-in-VMEM image)."""
-    II: int
-    n_pes: int
-    n_regs: int
-    mem_pes: Tuple[int, ...]
-    scalar: np.ndarray    # (S, P, 4)    [opcode, const, use_const, t0]
-    ops: np.ndarray       # (S, P, 3, 5) [kind, pe, reg, dist, init]
-    regw: np.ndarray      # (S, P, R, 3) [kind, pe, reg]
-
-    def cm_bytes(self) -> int:
-        return self.scalar.nbytes + self.ops.nbytes + self.regw.nbytes
-
-    def total_cycles(self, n_iters: int) -> int:
-        t0 = self.scalar[:, :, 3]
-        t_max = int(t0.max()) if (t0 >= 0).any() else 0
-        return t_max + n_iters * self.II + self.II + 2
-
-
-def _resolve_drivers(cfg: MachineConfig, s: int) -> np.ndarray:
-    """Per-link ultimate driver for slot ``s``: rows [kind, pe, reg].
-
-    Relaxes the bypass chain the same way the cycle-accurate simulator
-    does per cycle — but once, at link time, because the chain is static.
-    """
-    f = cfg.fabric
-    n_links = len(f.links)
-    drv = np.zeros((n_links, 3), np.int64)          # K_NONE
-    for _ in range(max(1, f.max_hops)):
-        changed = False
-        for p in range(f.n_pes):
-            for j, li in enumerate(f.out_links(p)):
-                kind, idx = cfg.xbar[s, p, j]
-                if kind == XB_NONE or drv[li, 0] != K_NONE:
-                    continue
-                if kind == XB_O:
-                    drv[li] = (K_O, p, 0)
-                    changed = True
-                elif kind == XB_REG:
-                    drv[li] = (K_R, p, idx)
-                    changed = True
-                elif kind == XB_IN and drv[idx, 0] != K_NONE:
-                    drv[li] = drv[idx]
-                    changed = True
-        if not changed:
-            break
-    return drv
-
-
-def link_config(cfg: MachineConfig) -> LinkedConfig:
-    """Lower a MachineConfig to the dense tables the Pallas kernel executes."""
-    S, P = cfg.II, cfg.fabric.n_pes
-    R = cfg.regw.shape[2]
-    scalar = np.zeros((S, P, 4), np.int32)
-    ops = np.zeros((S, P, 3, 5), np.int32)
-    regw = np.zeros((S, P, R, 3), np.int32)
-    scalar[:, :, 0] = cfg.opcode
-    scalar[:, :, 1] = cfg.const
-    scalar[:, :, 2] = cfg.use_const
-    scalar[:, :, 3] = cfg.t0
-
-    for s in range(S):
-        drv = _resolve_drivers(cfg, s)
-        for p in range(P):
-            for k in range(3):
-                kind, idx, dist, init = cfg.op_src[s, p, k]
-                if kind == SRC_NONE:
-                    row = (K_NONE, 0, 0, dist, init)
-                elif kind == SRC_REG:
-                    row = (K_R, p, idx, dist, init)
-                elif kind == SRC_SELF:
-                    row = (K_O, p, 0, dist, init)
-                elif kind == SRC_CONST:
-                    row = (K_CONST, 0, 0, dist, init)
-                else:                                  # SRC_IN: wire -> driver
-                    dk, dp, dr = drv[idx]
-                    row = (int(dk), int(dp), int(dr), dist, init)
-                ops[s, p, k] = row
-            for r in range(R):
-                kind, idx = cfg.regw[s, p, r]
-                if kind == XB_NONE:
-                    regw[s, p, r] = (K_NONE, 0, 0)
-                elif kind == XB_O:
-                    regw[s, p, r] = (K_RESULT, p, 0)
-                else:                                  # XB_IN via wire
-                    dk, dp, dr = drv[idx]
-                    regw[s, p, r] = (int(dk), int(dp), int(dr))
-    return LinkedConfig(II=cfg.II, n_pes=P, n_regs=R,
-                        mem_pes=tuple(cfg.fabric.mem_pes),
-                        scalar=scalar, ops=ops, regw=regw)
+__all__ = ["K_CONST", "K_NONE", "K_O", "K_R", "K_RESULT", "LinkedConfig",
+           "link_config"]

@@ -1,22 +1,28 @@
-"""Public wrapper: MachineConfig -> linked tables -> Pallas execution."""
+"""Public wrapper: MachineConfig -> lowered tables -> Pallas execution."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.lowering import LinkedConfig, link_config
 from repro.core.machine import MachineConfig
 from repro.kernels.cgra_exec.kernel import cgra_exec
-from repro.kernels.cgra_exec.linking import LinkedConfig, link_config
 
 
 def cgra_exec_op(cfg: MachineConfig, mem: np.ndarray, n_iters: int, *,
-                 lanes: int = 128, interpret: bool = True) -> np.ndarray:
+                 lanes: int = 128, interpret: bool = True,
+                 linked: Optional[LinkedConfig] = None) -> np.ndarray:
     """Execute a mapped CGRA configuration over a batch of test vectors.
 
     mem: (B, M) int32 scratchpad images.  interpret=True on CPU (the TPU
-    lowering is exercised by the dry-run harness, not here).
+    lowering is exercised by the dry-run harness, not here).  ``linked``
+    supplies a precomputed lowered artifact (e.g. the one memoized by the
+    ``ual`` compile pipeline); when omitted the config is lowered here.
     """
-    linked = link_config(cfg)
+    if linked is None:
+        linked = link_config(cfg)
     out = cgra_exec(linked, jnp.asarray(mem, jnp.int32), n_iters,
                     lanes=lanes, interpret=interpret)
     return np.asarray(out)

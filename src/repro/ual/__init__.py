@@ -23,10 +23,14 @@ Vocabulary:
   * ``Program``  — DFG + scratchpad layout + named I/O spec, content-hashed,
   * ``Target``   — fabric + mapper strategy + backend name,
   * ``compile``  — the staged pass pipeline (layout -> MII bounds ->
-    mapping strategy -> validation binding; per-pass timings in
-    ``CompileInfo.passes``), memoized across processes by
-    ``(program.digest, target.digest)``,
-  * ``Executable`` — ``run``/``run_batch``/``validate`` on any backend,
+    mapping strategy -> lowering -> validation binding; per-pass timings
+    in ``CompileInfo.passes``), memoized across processes by
+    ``(program.digest, target.digest)`` — both the mapping and the
+    lowered dense tables (``LinkedConfig``), so warm compiles neither
+    re-map nor re-lower,
+  * ``Executable`` — ``run``/``run_batch``/``validate`` on any backend;
+    ``run_batch`` is natively batched on ``sim`` and ``pallas`` and
+    reports throughput (``last_info["throughput_sps"]``),
   * ``compile_many``/``explore`` — grid compilation over a process pool
     with cache-aware dedup, and the Pareto DSE front-end on top of it.
 
@@ -37,6 +41,7 @@ raise without ``overwrite=True``): ``register_backend``
 (adaptive/sa built-in); enumerate with ``list_backends()`` /
 ``list_fabrics()`` / ``list_strategies()``.
 """
+from repro.core.lowering import LinkedConfig, link_config
 from repro.core.mapper import (MapperStrategy, list_strategies,
                                register_strategy)
 from repro.ual.backends import (Backend, get_backend, list_backends,
@@ -56,10 +61,11 @@ from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 __all__ = [
     "Backend", "CACHE_VERSION", "CacheStats", "CompileContext",
     "CompileInfo", "CompilePass", "DesignPoint", "Executable",
-    "ExploreReport", "FABRICS", "MapperStrategy", "MappingCache",
-    "PassRecord", "Pipeline", "Program", "Target", "compile",
-    "compile_many", "default_cache", "default_cache_dir",
-    "default_pipeline", "explore", "get_backend", "list_backends",
-    "list_fabrics", "list_strategies", "register_backend",
-    "register_fabric", "register_strategy", "set_default_cache",
+    "ExploreReport", "FABRICS", "LinkedConfig", "MapperStrategy",
+    "MappingCache", "PassRecord", "Pipeline", "Program", "Target",
+    "compile", "compile_many", "default_cache", "default_cache_dir",
+    "default_pipeline", "explore", "get_backend", "link_config",
+    "list_backends", "list_fabrics", "list_strategies",
+    "register_backend", "register_fabric", "register_strategy",
+    "set_default_cache",
 ]

@@ -5,10 +5,17 @@ arrays.  Three ship with the repo:
 
   * ``interp``  — the DFG interpreter oracle (no mapping required; the
     reference semantics every other backend must match bit-exactly),
-  * ``sim``     — the cycle-accurate simulator executing the mapped
-    machine configuration,
+  * ``sim``     — the vectorized, natively-batched simulator executing
+    the lowered configuration tables (``core.simulator.simulate_batch``),
   * ``pallas``  — the Pallas ``cgra_exec`` TPU kernel executing the same
-    configuration (batched; interpret-mode on CPU).
+    tables (batched; interpret-mode on CPU).
+
+``sim`` and ``pallas`` both consume the shared **lowered artifact**
+(``core.lowering.LinkedConfig``) produced once by the compile pipeline's
+lowering pass: backends that set ``consumes_lowered = True`` receive it
+via the ``lowered`` keyword — the tables are program-independent (pure
+function of the machine configuration), so custom device backends can
+execute them directly instead of re-deriving routing from the raw config.
 
 Third parties extend the layer with ``register_backend("mine", MyBackend())``
 — see ROADMAP.md for a worked example.  Backends are resolved by name at
@@ -34,18 +41,24 @@ class Backend:
 
     #: whether ``compile()`` must produce a machine configuration first
     requires_config: bool = True
+    #: backends that execute the lowered dense tables set this to True and
+    #: accept a ``lowered=`` keyword (a ``core.lowering.LinkedConfig``) in
+    #: ``execute``/``execute_batch``; backends that interpret the raw
+    #: config (or need no config at all) leave it False and keep the plain
+    #: four-argument signature
+    consumes_lowered: bool = False
 
     def execute(self, program: Program, result: Optional[MapResult],
-                mem: Mem, n_iters: int) -> Tuple[Mem, Info]:
+                mem: Mem, n_iters: int, **kw) -> Tuple[Mem, Info]:
         raise NotImplementedError
 
     def execute_batch(self, program: Program, result: Optional[MapResult],
-                      mems: List[Mem], n_iters: int
+                      mems: List[Mem], n_iters: int, **kw
                       ) -> Tuple[List[Mem], Info]:
         outs = []
         info: Info = {}
         for m in mems:
-            out, info = self.execute(program, result, m, n_iters)
+            out, info = self.execute(program, result, m, n_iters, **kw)
             outs.append(out)
         return outs, info
 
@@ -61,35 +74,64 @@ class InterpBackend(Backend):
 
 
 class SimBackend(Backend):
-    """Cycle-accurate simulation of the mapped configuration."""
+    """Vectorized, natively-batched simulation of the lowered tables.
 
-    def execute(self, program, result, mem, n_iters):
-        from repro.core.simulator import simulate
+    Consumes the shared lowered artifact; a single ``execute_batch`` call
+    steps the whole batch through the fabric simultaneously (leading
+    batch axis in the engine state).  The scalar reference engine remains
+    available as ``core.simulator.simulate_reference``.
+    """
+
+    consumes_lowered = True
+
+    @staticmethod
+    def _linked(result, lowered):
+        if lowered is not None:
+            return lowered
+        from repro.core.lowering import link_config
+        return link_config(result.config)
+
+    def execute(self, program, result, mem, n_iters, lowered=None):
+        from repro.core.simulator import simulate_batch
         flat = program.flatten(mem)
-        out, stats = simulate(result.config, flat, n_iters)
-        return program.unflatten(out), {"sim_stats": stats}
+        out, stats = simulate_batch(self._linked(result, lowered),
+                                    flat[None], n_iters)
+        return program.unflatten(out[0]), {"sim_stats": stats,
+                                           "engine": "vectorized"}
+
+    def execute_batch(self, program, result, mems, n_iters, lowered=None):
+        from repro.core.simulator import simulate_batch
+        flats = np.stack([program.flatten(m) for m in mems])
+        outs, stats = simulate_batch(self._linked(result, lowered),
+                                     flats, n_iters)
+        return ([program.unflatten(o) for o in outs],
+                {"sim_stats": stats, "engine": "vectorized", "batched": True})
 
 
 class PallasBackend(Backend):
     """Pallas ``cgra_exec`` TPU kernel (interpret-mode on CPU)."""
 
+    consumes_lowered = True
+
     def __init__(self, lanes: int = 128, interpret: bool = True):
         self.lanes = lanes
         self.interpret = interpret
 
-    def _run(self, program, result, flats: np.ndarray, n_iters: int):
+    def _run(self, program, result, flats: np.ndarray, n_iters: int,
+             lowered):
         from repro.kernels.cgra_exec.ops import cgra_exec_op
         return cgra_exec_op(result.config, flats, n_iters,
-                            lanes=self.lanes, interpret=self.interpret)
+                            lanes=self.lanes, interpret=self.interpret,
+                            linked=lowered)
 
-    def execute(self, program, result, mem, n_iters):
+    def execute(self, program, result, mem, n_iters, lowered=None):
         flat = program.flatten(mem)
-        out = self._run(program, result, flat[None], n_iters)[0]
+        out = self._run(program, result, flat[None], n_iters, lowered)[0]
         return program.unflatten(out), {}
 
-    def execute_batch(self, program, result, mems, n_iters):
+    def execute_batch(self, program, result, mems, n_iters, lowered=None):
         flats = np.stack([program.flatten(m) for m in mems])
-        outs = self._run(program, result, flats, n_iters)
+        outs = self._run(program, result, flats, n_iters, lowered)
         return [program.unflatten(o) for o in outs], {"batched": True}
 
 

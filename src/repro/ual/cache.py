@@ -1,4 +1,4 @@
-"""Mapping cache: memoizes ``MapResult`` per ``(program, target)`` pair.
+"""Mapping cache: memoizes compile artifacts per ``(program, target)`` pair.
 
 Modulo mapping dominates the toolchain's wall time (seconds to minutes per
 kernel, with restarts), yet the suite compiles the same kernels onto the
@@ -9,6 +9,15 @@ keeps results in two layers:
   * an in-process dict (free hits within one run),
   * an on-disk pickle directory (hits across processes: test runs,
     benchmark re-runs, CI re-tries).
+
+Two artifact kinds live side by side under the same key:
+
+  * the ``MapResult`` (placements + machine configuration) from the
+    mapping pass, and
+  * the **lowered artifact** (``core.lowering.LinkedConfig`` dense
+    tables) from the lowering pass — lower once, run many: a warm
+    compile re-lowers nothing, and every backend executing the same
+    configuration shares one set of tables.
 
 Hit/miss/store counters are exposed for tests to assert cache behavior.
 The disk layer defaults to ``$REPRO_UAL_CACHE`` or ``artifacts/ual_cache``
@@ -23,6 +32,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Optional, Tuple
 
+from repro.core.lowering import LOWERING_VERSION, LinkedConfig
 from repro.core.mapper import MAPPER_VERSION, MapResult
 
 #: bump to invalidate on-disk entries when the MapResult/MachineConfig
@@ -51,9 +61,17 @@ class CacheStats:
     misses: int = 0
     stores: int = 0
     disk_hits: int = 0
+    # -- lowered-artifact layer (counted separately: a compile can hit the
+    # mapping entry while still lowering cold, and tests assert each) ------
+    lowered_hits: int = 0
+    lowered_misses: int = 0
+    lowered_stores: int = 0
+    lowered_disk_hits: int = 0
 
     def reset(self) -> None:
         self.hits = self.misses = self.stores = self.disk_hits = 0
+        self.lowered_hits = self.lowered_misses = 0
+        self.lowered_stores = self.lowered_disk_hits = 0
 
 
 @dataclass
@@ -61,6 +79,9 @@ class MappingCache:
     disk_dir: Optional[Path] = field(default_factory=default_cache_dir)
     stats: CacheStats = field(default_factory=CacheStats)
     _mem: Dict[Tuple[str, str], MapResult] = field(default_factory=dict)
+    _mem_lowered: Dict[Tuple[str, str],
+                       Tuple[str, LinkedConfig]] = field(
+        default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.disk_dir is not None:
@@ -71,6 +92,12 @@ class MappingCache:
         return (self.disk_dir /
                 f"v{CACHE_VERSION}m{MAPPER_VERSION}_"
                 f"{pdig[:20]}_{tdig[:20]}.pkl")
+
+    def _lowered_path(self, key: Tuple[str, str]) -> Path:
+        pdig, tdig = key
+        return (self.disk_dir /
+                f"v{CACHE_VERSION}m{MAPPER_VERSION}l{LOWERING_VERSION}_"
+                f"{pdig[:20]}_{tdig[:20]}_low.pkl")
 
     def get(self, key: Tuple[str, str]) -> Optional[MapResult]:
         if key in self._mem:
@@ -114,10 +141,58 @@ class MappingCache:
             pickle.dump(result, f, protocol=pickle.HIGHEST_PROTOCOL)
         tmp.replace(path)  # atomic: concurrent compiles never read torn files
 
+    # -- lowered-artifact layer (same two-layer contract, same key) ---------
+    # Entries are stored WITH the fingerprint of the configuration they
+    # were lowered from: the wall-clock-budgeted mapper can produce
+    # different configs for the same key (another process, a re-map after
+    # a lost mapping pickle), and a mapping/lowered pair on disk may be
+    # written by two racing compiles — a fingerprint mismatch is a miss,
+    # never a silently-wrong artifact.
+    def get_lowered(self, key: Tuple[str, str],
+                    fingerprint: str) -> Optional[LinkedConfig]:
+        entry = self._mem_lowered.get(key)
+        if entry is not None:
+            fp, linked = entry
+            if fp == fingerprint:
+                self.stats.lowered_hits += 1
+                return linked
+        elif self.disk_dir is not None:
+            path = self._lowered_path(key)
+            if path.exists():
+                try:
+                    with path.open("rb") as f:
+                        fp, linked = pickle.load(f)
+                except (OSError, pickle.UnpicklingError, EOFError,
+                        AttributeError, ImportError, TypeError, ValueError):
+                    pass  # stale/corrupt entry: treat as a miss
+                else:
+                    if fp == fingerprint:
+                        self._mem_lowered[key] = (fp, linked)
+                        self.stats.lowered_hits += 1
+                        self.stats.lowered_disk_hits += 1
+                        return linked
+        self.stats.lowered_misses += 1
+        return None
+
+    def put_lowered(self, key: Tuple[str, str], linked: LinkedConfig,
+                    fingerprint: str, *, memory_only: bool = False) -> None:
+        self._mem_lowered[key] = (fingerprint, linked)
+        self.stats.lowered_stores += 1
+        if memory_only or self.disk_dir is None:
+            return
+        self.disk_dir.mkdir(parents=True, exist_ok=True)
+        path = self._lowered_path(key)
+        tmp = path.with_suffix(f".tmp.{os.getpid()}")
+        with tmp.open("wb") as f:
+            pickle.dump((fingerprint, linked), f,
+                        protocol=pickle.HIGHEST_PROTOCOL)
+        tmp.replace(path)  # atomic: concurrent compiles never read torn files
+
     def clear_memory(self) -> None:
         """Drop the in-process layer (disk entries survive) — lets tests
         exercise the cross-process path without spawning a process."""
         self._mem.clear()
+        self._mem_lowered.clear()
 
     def __len__(self) -> int:
         return len(self._mem)

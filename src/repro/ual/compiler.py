@@ -4,7 +4,8 @@ One call replaces the hand-wired seven-step ritual
 (``DFGBuilder -> plan_layout -> apply_layout -> map_dfg -> flat_memory ->
 simulate -> unflatten_memory``) every consumer used to repeat.  It drives
 the staged pass pipeline in ``ual.pipeline``
-(layout -> MII bounds -> mapping strategy -> validation binding), so:
+(layout -> MII bounds -> mapping strategy -> lowering -> validation
+binding), so:
 
   * temporal fabrics go through a registered ``MapperStrategy``
     (``adaptive``/``sa`` built-in, ``ual.register_strategy`` to extend),
@@ -14,6 +15,10 @@ the staged pass pipeline in ``ual.pipeline``
   * spatial fabrics (no time multiplexing) go through the analytic
     ``spatial_ii`` model,
   * mapping-free backends (``interp``) skip mapping entirely,
+  * successful mappings are lowered once to the dense linked tables
+    (``core.lowering.LinkedConfig``) that the ``sim`` and ``pallas``
+    engines both execute — memoized next to the ``MapResult`` under the
+    same key, so a warm compile re-lowers nothing,
   * every pass reports name / wall-time / stats into
     ``CompileInfo.passes`` for tooling and the DSE front-end.
 
@@ -59,4 +64,5 @@ def compile(program: Program, target: Target, *,
                        wall_s=time.perf_counter() - t0, key=ctx.key,
                        passes=list(ctx.records))
     return Executable(program, target, ctx.result, info,
-                      spatial_subgraphs=ctx.spatial_subgraphs)
+                      spatial_subgraphs=ctx.spatial_subgraphs,
+                      lowered=ctx.lowered)

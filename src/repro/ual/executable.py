@@ -1,23 +1,34 @@
 """``Executable`` — a compiled (Program, Target) pair, dict-in/dict-out.
 
 ``compile()`` produces one of these.  It owns the mapping artifacts
-(``MapResult`` with the machine configuration) plus compile-time metadata
-(cache hit?  how many mapper restarts did *this* compile pay?), and runs on
-any registered backend with automatic flatten/unflatten of the named
-arrays:
+(``MapResult`` with the machine configuration), the **lowered artifact**
+(the dense linked tables every execution engine consumes — produced once
+by the pipeline's lowering pass) and compile-time metadata (cache hit?
+how many mapper restarts did *this* compile pay?), and runs on any
+registered backend with automatic flatten/unflatten of the named arrays:
 
     exe = compile(program, target)
     out = exe.run(a=a, b=b)                  # dict in, dict out
-    outs = exe.run_batch([{...}, {...}])     # natively batched on pallas
+    outs = exe.run_batch([{...}, {...}])     # natively batched (sim/pallas)
+    exe.last_info["throughput_sps"]          # samples/s of that call
     report = exe.validate(seed=0)            # vs the DFG-interpreter oracle
+
+Execution info (engine stats, throughput) is *returned per call*
+internally; ``last_info`` is only a convenience copy of the most recent
+call's info, so one Executable can be shared across threads or worker
+processes (batched serving, ``explore(workers=N)``) without the info of
+concurrent calls racing each other — never read ``last_info`` to observe
+a *specific* call's info in concurrent code.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.lowering import LinkedConfig
 from repro.core.mapper import MapResult
 from repro.ual.backends import Backend, get_backend
 from repro.ual.program import Program
@@ -58,6 +69,10 @@ class Executable:
     map_result: Optional[MapResult]          # None for mapping-free backends
     compile_info: CompileInfo = field(default_factory=CompileInfo)
     spatial_subgraphs: int = 0               # spatial fabrics: #subgraphs
+    lowered: Optional[LinkedConfig] = None   # shared lowered artifact
+    #: convenience copy of the most recent run/run_batch info — NOT a
+    #: synchronization point; concurrent callers each get their own info
+    #: internally and this attribute only reflects whichever call wrote last
     last_info: Dict[str, object] = field(default_factory=dict)
 
     # -- introspection --------------------------------------------------------
@@ -97,6 +112,48 @@ class Executable:
                     f"recompile with a temporal fabric target")
         return be
 
+    def _backend_kwargs(self, be: Backend) -> Dict[str, object]:
+        """Extra keywords for backends that consume the lowered artifact.
+
+        Executables compiled before the lowering pass existed (or through
+        a custom pipeline without it) lower lazily here, once, and keep
+        the artifact for subsequent calls.
+        """
+        if not getattr(be, "consumes_lowered", False):
+            return {}
+        if (self.lowered is None and self.map_result is not None
+                and self.map_result.config is not None):
+            from repro.core.lowering import link_config
+            self.lowered = link_config(self.map_result.config)
+        return {"lowered": self.lowered}
+
+    def _execute(self, mem: Dict[str, np.ndarray], n_iters: int,
+                 backend: Optional[str]
+                 ) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        """One sample through a backend; returns (outputs, per-call info)."""
+        be = self._resolve(backend)
+        out, info = be.execute(self.program, self.map_result, mem, n_iters,
+                               **self._backend_kwargs(be))
+        return out, dict(info)
+
+    def _execute_batch(self, mems: Sequence[Dict[str, np.ndarray]],
+                       n_iters: int, backend: Optional[str]
+                       ) -> Tuple[List[Dict[str, np.ndarray]],
+                                  Dict[str, object]]:
+        """A batch through a backend; returns (outputs, per-call info with
+        wall time and throughput in samples/s)."""
+        be = self._resolve(backend)
+        mems = list(mems)
+        t0 = time.perf_counter()
+        outs, info = be.execute_batch(self.program, self.map_result, mems,
+                                      n_iters, **self._backend_kwargs(be))
+        wall = time.perf_counter() - t0
+        info = dict(info)
+        info["wall_s"] = wall
+        info["batch"] = len(mems)
+        info["throughput_sps"] = len(mems) / wall if wall > 0 else float("inf")
+        return outs, info
+
     def run(self, arrays: Optional[Dict[str, np.ndarray]] = None,
             n_iters: Optional[int] = None, *,
             backend: Optional[str] = None,
@@ -108,11 +165,10 @@ class Executable:
         dict form when an array name collides with a parameter name here
         (``arrays``/``n_iters``/``backend``).
         """
-        be = self._resolve(backend)
         mem = dict(arrays or {})
         mem.update(named)
         n = n_iters if n_iters is not None else self.program.n_iters
-        out, info = be.execute(self.program, self.map_result, mem, n)
+        out, info = self._execute(mem, n, backend)
         self.last_info = info
         return out
 
@@ -120,22 +176,27 @@ class Executable:
                   n_iters: Optional[int] = None, *,
                   backend: Optional[str] = None
                   ) -> List[Dict[str, np.ndarray]]:
-        be = self._resolve(backend)
+        """Execute a batch of named-array dicts; natively batched on the
+        ``sim`` and ``pallas`` backends (one engine sweep for the whole
+        batch).  The call's wall time, batch size and throughput
+        (``throughput_sps``, samples/s) are recorded in ``last_info``.
+        """
         n = n_iters if n_iters is not None else self.program.n_iters
-        outs, info = be.execute_batch(self.program, self.map_result,
-                                      list(mems), n)
+        outs, info = self._execute_batch(mems, n, backend)
         self.last_info = info
         return outs
 
     # -- validation -----------------------------------------------------------
     def validate(self, seed: int = 0, n_iters: Optional[int] = None,
-                 make_mem=None, backends: Optional[Sequence[str]] = None):
+                 make_mem=None, backends: Optional[Sequence[str]] = None,
+                 n_vectors: int = 1):
         """Random test vectors -> oracle vs backend(s), bit-exact.
 
-        Replaces the bespoke loop that used to live in ``core/validate.py``:
-        generates inputs (the Program's ``make_mem`` or uniform random),
-        runs the DFG-interpreter oracle once, then every requested backend,
-        and counts word mismatches over the declared output arrays.
+        Generates ``n_vectors`` input sets (the Program's ``make_mem`` or
+        uniform random), runs the DFG-interpreter oracle on each, then
+        every requested backend as ONE natively-batched sweep over the
+        shared lowered artifact — not ``n_vectors`` scalar runs — and
+        counts word mismatches over the declared output arrays.
         """
         from repro.core.dfg import interpret
         from repro.core.validate import ValidationReport
@@ -146,9 +207,9 @@ class Executable:
                                     n_iters or self.program.n_iters)
         n = n_iters if n_iters is not None else self.program.n_iters
         rng = np.random.default_rng(seed)
-        mem_in = (dict(make_mem(rng)) if make_mem is not None
-                  else self.program.random_inputs(rng))
-        expect = interpret(self.program.dfg, mem_in, n)
+        gen = make_mem if make_mem is not None else self.program.random_inputs
+        mems_in = [dict(gen(rng)) for _ in range(n_vectors)]
+        expects = [interpret(self.program.dfg, m, n) for m in mems_in]
 
         names = backends if backends is not None else (self.target.backend,)
         if "interp" in names:
@@ -160,13 +221,15 @@ class Executable:
         sim_stats = None
         per_backend: Dict[str, bool] = {}
         for bname in names:
-            got = self.run(mem_in, n, backend=bname)
+            gots, info = self._execute_batch(mems_in, n, bname)
             bad = sum(int((expect[a] != got[a]).sum())
+                      for expect, got in zip(expects, gots)
                       for a in self.program.outputs)
             per_backend[bname] = bad == 0
             mism += bad
-            if "sim_stats" in self.last_info:
-                sim_stats = self.last_info["sim_stats"]
+            if "sim_stats" in info:
+                sim_stats = info["sim_stats"]
         return ValidationReport(self.program.name, self.target.fabric.name,
                                 self.map_result, mism == 0, n, sim_stats,
-                                mism, backend_results=per_backend)
+                                mism, backend_results=per_backend,
+                                n_vectors=n_vectors)

@@ -11,6 +11,10 @@ instrumented passes, each timed with ``time.perf_counter`` and reporting a
   * ``mapping``  — cache lookup, then the registered ``MapperStrategy``
     for temporal fabrics / the analytic ``spatial_ii`` model for spatial
     ones; mapping-free backends skip this pass,
+  * ``lowering`` — lower the mapped configuration once to the dense
+    linked tables (``core.lowering.LinkedConfig``) every execution
+    engine consumes; memoized in the cache next to the ``MapResult``
+    under the same digest key, so a warm compile re-lowers nothing,
   * ``binding``  — bind the execution backend and record whether the
     result is runnable / validatable.
 
@@ -24,6 +28,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.lowering import (LinkedConfig, config_fingerprint,
+                                 link_config)
 from repro.core.mapper import (MapResult, map_dfg, rec_mii, res_mii,
                                spatial_ii)
 from repro.ual.backends import Backend
@@ -47,6 +53,7 @@ class CompileContext:
     res: Optional[int] = None            # ResMII
     mii: Optional[int] = None
     result: Optional[MapResult] = None   # None for mapping-free backends
+    lowered: Optional[LinkedConfig] = None  # the lowered artifact
     spatial_subgraphs: int = 0
     cache_hit: bool = False
     restarts_paid: int = 0               # mapper restarts paid by THIS compile
@@ -141,6 +148,47 @@ class MappingPass(CompilePass):
                 "restarts": result.restarts, "success": result.success}
 
 
+class LoweringPass(CompilePass):
+    """Lower the mapped configuration once to the dense linked tables.
+
+    The lowered artifact (``core.lowering.LinkedConfig``) is what every
+    execution engine consumes — the vectorized batched simulator gathers
+    over it, the Pallas kernel keeps it CM-resident in VMEM.  It is a
+    pure function of the machine configuration, so it is memoized in the
+    cache next to the ``MapResult`` under the same
+    ``(program.digest, target.digest)`` key: a warm compile reuses the
+    cached tables with zero re-lowering.  Skipped when there is nothing
+    to lower (mapping-free backends, spatial fabrics, failed mappings).
+    """
+
+    name = "lowering"
+
+    def run(self, ctx):
+        r = ctx.result
+        if r is None or not r.success or r.config is None:
+            return {"skipped": "no machine configuration"}
+        cacheable = (ctx.use_cache and ctx.target.label_fn is None
+                     and ctx.key is not None)
+        c = None
+        # the fingerprint pins the tables to THIS configuration: the
+        # budgeted mapper may produce a different config for the same key
+        # (re-map after a lost mapping pickle, racing processes sharing
+        # the disk dir), and stale tables must read as a miss
+        fp = config_fingerprint(r.config)
+        if cacheable:
+            c = ctx.cache if ctx.cache is not None else default_cache()
+            lowered = c.get_lowered(ctx.key, fp)
+            if lowered is not None:
+                ctx.lowered = lowered
+                return {"cache": "hit", "cm_bytes": lowered.cm_bytes()}
+        lowered = link_config(r.config)
+        if cacheable:
+            c.put_lowered(ctx.key, lowered, fp)
+        ctx.lowered = lowered
+        return {"cache": "miss" if cacheable else "bypass",
+                "cm_bytes": lowered.cm_bytes()}
+
+
 class BindingPass(CompilePass):
     """Validation binding: tie the backend to the mapping artifacts.
 
@@ -179,4 +227,4 @@ class Pipeline:
 
 def default_pipeline() -> Pipeline:
     return Pipeline([LayoutPass(), MIIBoundsPass(), MappingPass(),
-                     BindingPass()])
+                     LoweringPass(), BindingPass()])

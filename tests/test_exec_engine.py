@@ -1,0 +1,210 @@
+"""Lower-once / run-many: shared lowering pass + vectorized batched engine.
+
+The execution-path contract under test:
+
+  * the compile pipeline lowers a mapped configuration ONCE to the dense
+    linked tables; warm compiles reuse the cached artifact with zero
+    re-lowering (in-process and across the disk layer), and the ``sim``
+    and ``pallas`` backends both execute that one artifact,
+  * ``simulate_batch`` (the vectorized engine, leading batch axis) is
+    bit-exact against ``simulate_reference`` (the scalar semantics spec)
+    including the per-sample ``SimStats``,
+  * ``run_batch`` is natively batched on ``sim`` and reports throughput,
+  * memory-port oversubscription is recorded in ``SimStats`` (worst
+    cycle, ports used) even with ``check_ports=False``,
+  * run/run_batch info is returned per call — ``last_info`` is only a
+    convenience copy, so shared Executables are reentrant.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro import ual
+from repro.core.lowering import link_config
+from repro.core.machine import XB_IN
+from repro.core.simulator import simulate_batch, simulate_reference
+
+
+def _compiled(kname="gemm", **knobs):
+    program = ual.Program.from_kernel(kname)
+    target = ual.Target.from_name("hycube", rows=4, cols=4, **knobs)
+    exe = ual.compile(program, target)
+    assert exe.success
+    return program, exe
+
+
+def _flat_batch(program, B, seed=0):
+    rng = np.random.default_rng(seed)
+    named = [program.random_inputs(rng) for _ in range(B)]
+    return named, np.stack([program.flatten(m) for m in named])
+
+
+# ---------------------------------------------------------------------------
+# engine parity
+# ---------------------------------------------------------------------------
+
+def test_batched_engine_bitexact_vs_reference():
+    """Vectorized-batched == scalar reference, outputs AND stats — on a
+    config that exercises HyCUBE multi-hop bypass chains."""
+    program, exe = _compiled("gemm")
+    cfg = exe.map_result.config
+    # the mapped config routes through wire-to-wire segments, so the
+    # lowered tables really collapse multi-hop chains
+    assert int((cfg.xbar[..., 0] == XB_IN).sum()) > 0
+    _, flats = _flat_batch(program, 5)
+    outs, stats = simulate_batch(exe.lowered, flats, program.n_iters)
+    for b in range(5):
+        want, rstats = simulate_reference(cfg, flats[b], program.n_iters)
+        np.testing.assert_array_equal(outs[b], want)
+    assert (stats.cycles, stats.fired, stats.idle_slots,
+            stats.mem_accesses, stats.max_mem_ports_used,
+            stats.worst_port_cycle) == \
+           (rstats.cycles, rstats.fired, rstats.idle_slots,
+            rstats.mem_accesses, rstats.max_mem_ports_used,
+            rstats.worst_port_cycle)
+
+
+def test_sim_backend_natively_batched_with_throughput():
+    program, exe = _compiled("gemm")
+    named, _ = _flat_batch(program, 8, seed=3)
+    outs = exe.run_batch(named)
+    info = exe.last_info
+    assert info.get("batched") and info["batch"] == 8
+    assert info["throughput_sps"] > 0 and info["wall_s"] > 0
+    assert "sim_stats" in info
+    for mem, got in zip(named, outs):
+        want = exe.run(mem, backend="sim")
+        for name in program.outputs:
+            np.testing.assert_array_equal(got[name], want[name])
+
+
+def test_validate_one_batched_sweep_per_backend():
+    program, exe = _compiled("nw")
+    rep = exe.validate(seed=2, backends=("sim", "pallas"), n_vectors=3)
+    assert rep.passed and rep.n_vectors == 3
+    assert rep.backend_results == {"sim": True, "pallas": True}
+    assert rep.sim_stats is not None
+
+
+# ---------------------------------------------------------------------------
+# lowering: once per compile, shared by every backend
+# ---------------------------------------------------------------------------
+
+def test_lowering_cached_with_zero_relowering(tmp_path, monkeypatch):
+    """Cold compile lowers once; warm compiles (memory AND disk layer)
+    reuse the artifact — proved by making any further lowering raise —
+    and sim + pallas execute that one artifact bit-exactly vs the oracle."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    target = ual.Target.from_name("hycube", rows=4, cols=4)
+
+    cold = ual.compile(program, target, cache=cache)
+    assert cold.lowered is not None
+    assert cache.stats.lowered_misses == 1
+    assert cache.stats.lowered_stores == 1
+
+    def boom(*a, **kw):
+        raise AssertionError("re-lowering after the cold compile")
+
+    for where in ("repro.core.lowering.link_config",
+                  "repro.ual.pipeline.link_config",
+                  "repro.kernels.cgra_exec.ops.link_config"):
+        monkeypatch.setattr(where, boom)
+
+    warm = ual.compile(program, target, cache=cache)
+    assert warm.compile_info.cache_hit and warm.lowered is not None
+    assert cache.stats.lowered_hits == 1
+
+    cache.clear_memory()                      # cross-process path
+    disk = ual.compile(program, target, cache=cache)
+    assert disk.lowered is not None
+    assert cache.stats.lowered_disk_hits == 1
+
+    # both device backends execute the shared artifact (no re-linking)
+    mem = program.random_inputs(np.random.default_rng(1))
+    oracle = disk.run(mem, backend="interp")
+    for backend in ("sim", "pallas"):
+        got = disk.run(mem, backend=backend)
+        for name in program.outputs:
+            np.testing.assert_array_equal(got[name], oracle[name])
+
+
+def test_lowered_cache_rejects_foreign_fingerprint(tmp_path):
+    """Tables pinned to a DIFFERENT configuration (racing process, re-map
+    after a lost mapping pickle) must read as a miss, never execute."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    target = ual.Target.from_name("hycube", rows=4, cols=4)
+    cold = ual.compile(program, target, cache=cache)
+    key = cold.compile_info.key
+    cache.put_lowered(key, cold.lowered, "fingerprint-of-another-config")
+    cache.stats.reset()
+
+    warm = ual.compile(program, target, cache=cache)
+    assert warm.compile_info.cache_hit           # the mapping still hits
+    assert cache.stats.lowered_hits == 0         # mismatched tables: miss
+    assert cache.stats.lowered_stores == 1       # re-lowered and re-pinned
+    np.testing.assert_array_equal(warm.lowered.scalar, cold.lowered.scalar)
+
+
+def test_lowered_artifact_excluded_for_configless_executables():
+    program = ual.Program.from_kernel("gemm")
+    exe = ual.compile(program, ual.Target.from_name("spatial", rows=4,
+                                                    cols=4, backend="interp"))
+    assert exe.lowered is None
+    stats = {p.name: p.stats for p in exe.compile_info.passes}
+    assert stats["lowering"] == {"skipped": "no machine configuration"}
+
+
+# ---------------------------------------------------------------------------
+# port-pressure accounting
+# ---------------------------------------------------------------------------
+
+def test_port_oversubscription_recorded_without_check():
+    """Shrinking the port budget below the mapped schedule's worst cycle:
+    check_ports=False must still record (worst cycle, ports used) in the
+    stats instead of the information living only in a RuntimeError."""
+    program, exe = _compiled("gemm")
+    cfg = copy.deepcopy(exe.map_result.config)
+    assert cfg.fabric.n_mem_ports >= 2
+    cfg.fabric.n_mem_ports = 1
+    linked = link_config(cfg)
+    _, flats = _flat_batch(program, 3, seed=5)
+
+    out, stats = simulate_batch(linked, flats, program.n_iters,
+                                check_ports=False)
+    assert stats.max_mem_ports_used > 1
+    assert stats.worst_port_cycle >= 0
+    assert stats.mem_ports_limit == 1
+    assert stats.oversubscribed
+    # the reference engine records the same pressure
+    _, rstats = simulate_reference(cfg, flats[0], program.n_iters,
+                                   check_ports=False)
+    assert (rstats.max_mem_ports_used, rstats.worst_port_cycle) == \
+           (stats.max_mem_ports_used, stats.worst_port_cycle)
+    assert rstats.oversubscribed
+
+    with pytest.raises(RuntimeError, match="oversubscription"):
+        simulate_batch(linked, flats, program.n_iters, check_ports=True)
+
+
+# ---------------------------------------------------------------------------
+# reentrancy: per-call info, last_info is a convenience copy
+# ---------------------------------------------------------------------------
+
+def test_last_info_is_a_per_call_copy():
+    program, exe = _compiled("gemm")
+    mem = program.random_inputs(np.random.default_rng(0))
+    exe.run(mem)
+    first = exe.last_info
+    exe.run(mem)
+    assert exe.last_info is not first          # fresh dict per call
+
+    # validate() threads info internally — it must not clobber last_info,
+    # so concurrent sharers of one Executable never race through it
+    sentinel = {"sentinel": True}
+    exe.last_info = sentinel
+    rep = exe.validate(seed=0, backends=("sim",), n_vectors=2)
+    assert rep.passed
+    assert exe.last_info is sentinel

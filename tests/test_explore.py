@@ -3,7 +3,7 @@
 The redesigned compile path under test:
 
   * ``compile()`` is a staged pipeline — layout -> MII bounds -> mapping
-    strategy -> validation binding — and every pass reports
+    strategy -> lowering -> validation binding — and every pass reports
     name/wall-time/stats into ``CompileInfo.passes``,
   * mapper strategies resolve through a registry with the same contract
     as backends/fabrics (duplicates raise, unknown names raise with the
@@ -20,7 +20,7 @@ from repro import ual
 from repro.core.adl import hycube, spatial
 from repro.core.mapper import AdaptiveStrategy, spatial_ii
 
-PASS_NAMES = ["layout", "mii", "mapping", "binding"]
+PASS_NAMES = ["layout", "mii", "mapping", "lowering", "binding"]
 
 
 # ---------------------------------------------------------------------------
@@ -41,6 +41,8 @@ def test_pipeline_pass_records_cold_and_warm(tmp_path):
                                         by_name["mii"]["res_mii"])
     assert by_name["mapping"]["cache"] == "miss"
     assert by_name["mapping"]["II"] == cold.II >= by_name["mii"]["mii"]
+    assert by_name["lowering"]["cache"] == "miss"
+    assert by_name["lowering"]["cm_bytes"] == cold.lowered.cm_bytes()
     assert by_name["binding"] == {"backend": "sim", "requires_config": True,
                                   "runnable": True, "validatable": True}
     # the mapping pass dominates a cold compile's wall time
@@ -52,7 +54,9 @@ def test_pipeline_pass_records_cold_and_warm(tmp_path):
     warm = ual.compile(program, target, cache=cache)
     wstats = {p.name: p.stats for p in warm.compile_info.passes}
     assert wstats["mapping"]["cache"] == "hit"
+    assert wstats["lowering"]["cache"] == "hit"      # zero re-lowering
     assert warm.compile_info.cache_hit
+    assert warm.lowered is not None
 
 
 def test_pipeline_skips_mapping_for_mapping_free_backend():
@@ -83,7 +87,7 @@ def test_custom_pipeline_pass_list():
                       use_cache=False)
     assert exe.success
     assert [p.name for p in exe.compile_info.passes] == \
-        ["layout", "mii", "count_ops", "mapping", "binding"]
+        ["layout", "mii", "count_ops", "mapping", "lowering", "binding"]
     assert seen["ops"] == len(program.laid.nodes)
 
 
@@ -222,7 +226,10 @@ def test_compile_many_failure_stays_off_disk(tmp_path):
     assert not exes[1].success and not exes[2].success
     assert exes[2].compile_info.cache_hit          # dedup'd, not re-mapped
     pkls = list((tmp_path / "ual").glob("*.pkl"))
-    assert len(pkls) == 1                          # only the success persisted
+    # only the success persisted: its mapping entry (+ at most its lowered
+    # artifact) — the failure never reaches disk
+    assert len([p for p in pkls if not p.name.endswith("_low.pkl")]) == 1
+    assert len([p for p in pkls if p.name.endswith("_low.pkl")]) <= 1
 
 
 # ---------------------------------------------------------------------------
