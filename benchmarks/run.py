@@ -9,10 +9,12 @@ paper claim is violated.
 ``--smoke`` skips the full benches and instead compiles one kernel per
 registered temporal fabric through the UAL, cache-cold then cache-warm,
 runs a B=16 batched-sim throughput check off the shared lowered artifact
-(oracle parity + nonzero samples/s), then a 2-fabric x 2-strategy
-mini-sweep through ``compile_many(workers=2)`` — a fast regression gate
-for the toolchain, mapping cache, execution engines and DSE front-end
-(used by CI, which uploads the resulting ``artifacts/bench/smoke.json``).
+(oracle parity + nonzero samples/s), a 2-fabric x 2-strategy mini-sweep
+through ``compile_many(workers=2)``, and a dynamic-batching service gate
+(32 requests through a ``max_batch=8`` ``ual.Service``, oracle parity
+spot-checked, nonzero samples/s) — a fast regression gate for the
+toolchain, mapping cache, execution engines, DSE front-end and serving
+layer (used by CI, which uploads ``artifacts/bench/smoke.json``).
 """
 from __future__ import annotations
 
@@ -23,7 +25,7 @@ import time
 
 from benchmarks import (bench_dse, bench_exec, bench_fig9_spatial_vs_st,
                         bench_fig10_voltage, bench_fig11_breakdown,
-                        bench_roofline, bench_table2_validation,
+                        bench_roofline, bench_serve, bench_table2_validation,
                         bench_table3_multihop, bench_table4_efficiency)
 from benchmarks.common import fmt_table, save
 
@@ -37,6 +39,7 @@ BENCHES = {
     "roofline": bench_roofline.run,
     "dse_explore": bench_dse.run,
     "exec_throughput": bench_exec.run,
+    "serve_throughput": bench_serve.run,
 }
 
 SMOKE_TARGETS = (
@@ -50,12 +53,14 @@ SMOKE_KERNEL = "gemm"
 
 def smoke() -> int:
     """Compile one kernel per fabric (cold + warm), validate on sim, run a
-    B=16 batched-sim throughput check, then mini-sweep 2 fabrics x
-    2 strategies through ``compile_many(workers=2)``.
+    B=16 batched-sim throughput check, mini-sweep 2 fabrics x
+    2 strategies through ``compile_many(workers=2)``, then push 32
+    single-sample requests through a ``max_batch=8`` ``ual.Service``.
 
     Exit non-zero if any compile fails, any validation mismatches, the
     warm compile misses the cache, the batched engine loses oracle parity
-    or reports zero throughput, or the sweep pays redundant mappings.
+    or reports zero throughput, the sweep pays redundant mappings, or the
+    service gate loses parity / reports zero samples/s.
     Writes ``artifacts/bench/smoke.json`` (uploaded by CI).
     """
     import numpy as np
@@ -101,6 +106,15 @@ def smoke() -> int:
     print("== smoke: one kernel per fabric, cache-cold then cache-warm ==")
     print(fmt_table(["kernel@fabric", "II", "cold", "warm", "check"], rows))
     print(f"cache: {cache.stats}")
+    # the aggregate view (MappingCache.stats()): ratios + disk entries.
+    # Rendered after the tempdir closes, so disk_entries reads 0 here —
+    # the ratios are the point; disk counts are live in the service gate
+    agg = cache.stats()
+    print("cache aggregate: " + " | ".join(
+        f"{layer}: hit_ratio={v['hit_ratio']} "
+        f"({v['hits']}/{v['lookups']}), stores={v['stores']}, "
+        f"disk_entries={v['disk_entries']}"
+        for layer, v in agg.items()))
 
     # -- batched-sim throughput gate: one kernel, B=16, vectorized engine
     # off the shared lowered artifact; parity with the oracle + nonzero
@@ -159,8 +173,52 @@ def smoke() -> int:
         sweep_json = report.to_json()
         sweep_json["rewarm_all_cached"] = rewarm.n_mapped == 0
 
+    # -- service gate: >=32 single-sample requests through a max_batch=8
+    # dynamic-batching service; oracle-parity spot-check on 4 responses,
+    # nonzero samples/s — so the queue->coalesce->sweep path can't rot
+    service_json = None
+    with tempfile.TemporaryDirectory() as d:
+        from repro.core.dfg import interpret
+        scache = ual.MappingCache(disk_dir=d)
+        target = ual.Target.from_name("hycube", rows=4, cols=4)
+        program = ual.Program.from_kernel(
+            SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports)
+        n_req = 32
+        rng = np.random.default_rng(2)
+        mems = [program.random_inputs(rng) for _ in range(n_req)]
+        with ual.Service(max_batch=8, max_wait_ms=5.0,
+                         max_queue=2 * n_req, cache=scache) as svc:
+            resps = [svc.submit(program, target, m, tenant="smoke")
+                     for m in mems]
+            outs = [r.result(timeout=300) for r in resps]
+            stats = svc.stats()
+        spot = [0, 9, 17, n_req - 1]
+        parity = all(
+            np.array_equal(interpret(program.dfg, mems[i],
+                                     program.n_iters)[name], outs[i][name])
+            for i in spot for name in program.outputs)
+        sps = stats["samples_per_s"]
+        if not parity:
+            failures.append("service: oracle parity mismatch")
+        if not sps > 0:
+            failures.append("service: zero samples/s")
+        if stats["completed"] != n_req:
+            failures.append(f"service: {stats['completed']}/{n_req} "
+                            f"requests completed")
+        service_json = {"requests": n_req, "max_batch": 8,
+                        "parity_spot_checked": len(spot), "parity": parity,
+                        "samples_per_s": sps,
+                        "mean_batch": stats["mean_batch"],
+                        "p50_ms": stats["p50_ms"],
+                        "p99_ms": stats["p99_ms"],
+                        "rejects": stats["rejects"]}
+        print(f"\n== smoke: service {n_req} requests @ max_batch=8: "
+              f"{sps} samples/s, mean batch {stats['mean_batch']}, "
+              f"parity={'ok' if parity else 'FAIL'} ==")
+
     save("smoke", {"fabrics": rows, "sweep": sweep_json,
-                   "batched_sim": batched_json, "failures": failures})
+                   "batched_sim": batched_json, "service": service_json,
+                   "failures": failures})
     for f in failures:
         print(f"FAIL {f}")
     return 1 if failures else 0

@@ -32,7 +32,15 @@ Vocabulary:
     ``run_batch`` is natively batched on ``sim`` and ``pallas`` and
     reports throughput (``last_info["throughput_sps"]``),
   * ``compile_many``/``explore`` — grid compilation over a process pool
-    with cache-aware dedup, and the Pareto DSE front-end on top of it.
+    with cache-aware dedup, and the Pareto DSE front-end on top of it,
+  * ``Service``  — the dynamic-batching execution service
+    (``repro.ual.service``): single-sample requests are queued, coalesced
+    into micro-batches per ``(program.digest, target.digest)`` class and
+    executed as one ``run_batch`` sweep on shared warm Executables;
+    ``submit`` returns a ``Response`` future, overload and expired
+    deadlines come back as ``ServiceRejected`` verdicts, and
+    ``Service.stats()`` reports p50/p99 latency, achieved batch size,
+    samples/s, queue depth and rejects.
 
 Extension points, all the same shape (named registry, duplicate names
 raise without ``overwrite=True``): ``register_backend``
@@ -56,13 +64,15 @@ from repro.ual.explore import (DesignPoint, ExploreReport, compile_many,
 from repro.ual.pipeline import (CompileContext, CompilePass, Pipeline,
                                 default_pipeline)
 from repro.ual.program import Program
+from repro.ual.service import Response, Service, ServiceRejected
 from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 
 __all__ = [
     "Backend", "CACHE_VERSION", "CacheStats", "CompileContext",
     "CompileInfo", "CompilePass", "DesignPoint", "Executable",
     "ExploreReport", "FABRICS", "LinkedConfig", "MapperStrategy",
-    "MappingCache", "PassRecord", "Pipeline", "Program", "Target",
+    "MappingCache", "PassRecord", "Pipeline", "Program", "Response",
+    "Service", "ServiceRejected", "Target",
     "compile", "compile_many", "default_cache", "default_cache_dir",
     "default_pipeline", "explore", "get_backend", "link_config",
     "list_backends", "list_fabrics", "list_strategies",

@@ -19,7 +19,18 @@ Two artifact kinds live side by side under the same key:
     compile re-lowers nothing, and every backend executing the same
     configuration shares one set of tables.
 
-Hit/miss/store counters are exposed for tests to assert cache behavior.
+Hit/miss/store counters are exposed for tests to assert cache behavior:
+``cache.stats`` holds the raw ``CacheStats`` counters, and *calling* it —
+``cache.stats()`` — returns the aggregate view (hit/miss ratios plus
+on-disk entry counts for both the mapping and lowered tables).
+
+The cache is thread-safe: one lock guards the in-process layers and the
+counters, and ``lock_key(key)`` hands out a per-key compile lock so the
+pipeline can double-check under it — two threads compiling the same
+``(program, target)`` digest pair pay exactly one mapper run and one
+lowering (the execution service leans on this when a cold tenant's first
+requests arrive on several workers at once).
+
 The disk layer defaults to ``$REPRO_UAL_CACHE`` or ``artifacts/ual_cache``
 next to the repo; pass ``MappingCache(disk_dir=None)`` for a purely
 in-process cache.
@@ -28,9 +39,10 @@ from __future__ import annotations
 
 import os
 import pickle
+import threading
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.lowering import LOWERING_VERSION, LinkedConfig
 from repro.core.mapper import MAPPER_VERSION, MapResult
@@ -67,11 +79,38 @@ class CacheStats:
     lowered_misses: int = 0
     lowered_stores: int = 0
     lowered_disk_hits: int = 0
+    #: probe for on-disk entry counts, wired up by the owning
+    #: ``MappingCache`` so the aggregate view can report them; a bare
+    #: ``CacheStats`` (no owner) reports zero disk entries
+    _disk_counts: Optional[Callable[[], Tuple[int, int]]] = field(
+        default=None, repr=False, compare=False)
 
     def reset(self) -> None:
         self.hits = self.misses = self.stores = self.disk_hits = 0
         self.lowered_hits = self.lowered_misses = 0
         self.lowered_stores = self.lowered_disk_hits = 0
+
+    @staticmethod
+    def _layer(hits: int, misses: int, stores: int, disk_hits: int,
+               disk_entries: int) -> Dict[str, object]:
+        total = hits + misses
+        return {"hits": hits, "misses": misses, "stores": stores,
+                "disk_hits": disk_hits, "lookups": total,
+                "hit_ratio": round(hits / total, 4) if total else None,
+                "disk_entries": disk_entries}
+
+    def __call__(self) -> Dict[str, Dict[str, object]]:
+        """Aggregate view (this is what ``MappingCache.stats()`` returns):
+        per-layer hit/miss ratios and on-disk entry counts for both the
+        mapping and lowered tables."""
+        m_disk, l_disk = self._disk_counts() if self._disk_counts else (0, 0)
+        return {
+            "mapping": self._layer(self.hits, self.misses, self.stores,
+                                   self.disk_hits, m_disk),
+            "lowered": self._layer(self.lowered_hits, self.lowered_misses,
+                                   self.lowered_stores,
+                                   self.lowered_disk_hits, l_disk),
+        }
 
 
 @dataclass
@@ -82,10 +121,16 @@ class MappingCache:
     _mem_lowered: Dict[Tuple[str, str],
                        Tuple[str, LinkedConfig]] = field(
         default_factory=dict)
+    _lock: object = field(default_factory=threading.RLock, repr=False,
+                          compare=False)
+    _key_locks: Dict[Tuple[str, str], object] = field(default_factory=dict,
+                                                      repr=False,
+                                                      compare=False)
 
     def __post_init__(self) -> None:
         if self.disk_dir is not None:
             self.disk_dir = Path(self.disk_dir)
+        self.stats._disk_counts = self._disk_entry_counts
 
     def _path(self, key: Tuple[str, str]) -> Path:
         pdig, tdig = key
@@ -99,10 +144,12 @@ class MappingCache:
                 f"v{CACHE_VERSION}m{MAPPER_VERSION}l{LOWERING_VERSION}_"
                 f"{pdig[:20]}_{tdig[:20]}_low.pkl")
 
-    def get(self, key: Tuple[str, str]) -> Optional[MapResult]:
+    def _load(self, key: Tuple[str, str]
+              ) -> Tuple[Optional[MapResult], bool]:
+        """Memory-then-disk lookup, no counters; returns
+        ``(result, from_disk)``.  Caller holds ``self._lock``."""
         if key in self._mem:
-            self.stats.hits += 1
-            return self._mem[key]
+            return self._mem[key], False
         if self.disk_dir is not None:
             path = self._path(key)
             if path.exists():
@@ -114,32 +161,64 @@ class MappingCache:
                     pass  # stale/corrupt entry: treat as a miss
                 else:
                     self._mem[key] = result
-                    self.stats.hits += 1
-                    self.stats.disk_hits += 1
-                    return result
-        self.stats.misses += 1
-        return None
+                    return result, True
+        return None, False
+
+    def get(self, key: Tuple[str, str]) -> Optional[MapResult]:
+        with self._lock:
+            result, from_disk = self._load(key)
+            if result is None:
+                self.stats.misses += 1
+                return None
+            self.stats.hits += 1
+            if from_disk:
+                self.stats.disk_hits += 1
+            return result
+
+    def peek(self, key: Tuple[str, str]) -> Optional[MapResult]:
+        """``get`` without touching the hit/miss counters — the
+        double-checked re-read under ``lock_key``, where a hit means
+        "another thread just mapped this" rather than a warm compile."""
+        with self._lock:
+            return self._load(key)[0]
 
     def contains(self, key: Tuple[str, str]) -> bool:
         """Whether ``get(key)`` would hit (either layer), without touching
         the hit/miss counters — a peek for schedulers (``compile_many``)
         deciding what still needs to be mapped."""
-        if key in self._mem:
-            return True
-        return self.disk_dir is not None and self._path(key).exists()
+        with self._lock:
+            if key in self._mem:
+                return True
+            return self.disk_dir is not None and self._path(key).exists()
+
+    def lock_key(self, key: Tuple[str, str]) -> object:
+        """The per-key compile lock: the pipeline's mapping and lowering
+        passes serialize cold compiles of one digest pair under it
+        (miss -> acquire -> ``peek`` again -> compute), so concurrent
+        threads pay exactly one mapper run and one lowering per key."""
+        with self._lock:
+            lock = self._key_locks.get(key)
+            if lock is None:
+                lock = self._key_locks[key] = threading.Lock()
+            return lock
 
     def put(self, key: Tuple[str, str], result: MapResult, *,
             memory_only: bool = False) -> None:
-        self._mem[key] = result
-        self.stats.stores += 1
+        with self._lock:
+            self._mem[key] = result
+            self.stats.stores += 1
         if memory_only or self.disk_dir is None:
             return
+        # pickle + write OUTSIDE the cache lock: a slow disk store must
+        # not stall every unrelated lookup; the atomic rename (and the
+        # per-key compile lock upstream) already handles racing writers
         self.disk_dir.mkdir(parents=True, exist_ok=True)
         path = self._path(key)
-        tmp = path.with_suffix(f".tmp.{os.getpid()}")
+        tmp = path.with_suffix(
+            f".tmp.{os.getpid()}.{threading.get_ident()}")
         with tmp.open("wb") as f:
             pickle.dump(result, f, protocol=pickle.HIGHEST_PROTOCOL)
-        tmp.replace(path)  # atomic: concurrent compiles never read torn files
+        tmp.replace(path)  # atomic: racers never read torn files
 
     # -- lowered-artifact layer (same two-layer contract, same key) ---------
     # Entries are stored WITH the fingerprint of the configuration they
@@ -148,14 +227,15 @@ class MappingCache:
     # a lost mapping pickle), and a mapping/lowered pair on disk may be
     # written by two racing compiles — a fingerprint mismatch is a miss,
     # never a silently-wrong artifact.
-    def get_lowered(self, key: Tuple[str, str],
-                    fingerprint: str) -> Optional[LinkedConfig]:
+    def _load_lowered(self, key: Tuple[str, str], fingerprint: str
+                      ) -> Tuple[Optional[LinkedConfig], bool]:
+        """Memory-then-disk lowered lookup, no counters; returns
+        ``(linked, from_disk)``.  Caller holds ``self._lock``."""
         entry = self._mem_lowered.get(key)
         if entry is not None:
             fp, linked = entry
             if fp == fingerprint:
-                self.stats.lowered_hits += 1
-                return linked
+                return linked, False
         elif self.disk_dir is not None:
             path = self._lowered_path(key)
             if path.exists():
@@ -168,34 +248,63 @@ class MappingCache:
                 else:
                     if fp == fingerprint:
                         self._mem_lowered[key] = (fp, linked)
-                        self.stats.lowered_hits += 1
-                        self.stats.lowered_disk_hits += 1
-                        return linked
-        self.stats.lowered_misses += 1
-        return None
+                        return linked, True
+        return None, False
+
+    def get_lowered(self, key: Tuple[str, str],
+                    fingerprint: str) -> Optional[LinkedConfig]:
+        with self._lock:
+            linked, from_disk = self._load_lowered(key, fingerprint)
+            if linked is None:
+                self.stats.lowered_misses += 1
+                return None
+            self.stats.lowered_hits += 1
+            if from_disk:
+                self.stats.lowered_disk_hits += 1
+            return linked
+
+    def peek_lowered(self, key: Tuple[str, str],
+                     fingerprint: str) -> Optional[LinkedConfig]:
+        """``get_lowered`` without counters (see ``peek``)."""
+        with self._lock:
+            return self._load_lowered(key, fingerprint)[0]
 
     def put_lowered(self, key: Tuple[str, str], linked: LinkedConfig,
                     fingerprint: str, *, memory_only: bool = False) -> None:
-        self._mem_lowered[key] = (fingerprint, linked)
-        self.stats.lowered_stores += 1
+        with self._lock:
+            self._mem_lowered[key] = (fingerprint, linked)
+            self.stats.lowered_stores += 1
         if memory_only or self.disk_dir is None:
             return
+        # disk write outside the cache lock (see put())
         self.disk_dir.mkdir(parents=True, exist_ok=True)
         path = self._lowered_path(key)
-        tmp = path.with_suffix(f".tmp.{os.getpid()}")
+        tmp = path.with_suffix(
+            f".tmp.{os.getpid()}.{threading.get_ident()}")
         with tmp.open("wb") as f:
             pickle.dump((fingerprint, linked), f,
                         protocol=pickle.HIGHEST_PROTOCOL)
-        tmp.replace(path)  # atomic: concurrent compiles never read torn files
+        tmp.replace(path)  # atomic: racers never read torn files
+
+    # -- aggregate view ------------------------------------------------------
+    def _disk_entry_counts(self) -> Tuple[int, int]:
+        """(mapping, lowered) entry counts on disk; (0, 0) when diskless."""
+        if self.disk_dir is None or not Path(self.disk_dir).is_dir():
+            return (0, 0)
+        names = [p.name for p in Path(self.disk_dir).glob("*.pkl")]
+        lowered = sum(1 for n in names if n.endswith("_low.pkl"))
+        return (len(names) - lowered, lowered)
 
     def clear_memory(self) -> None:
         """Drop the in-process layer (disk entries survive) — lets tests
         exercise the cross-process path without spawning a process."""
-        self._mem.clear()
-        self._mem_lowered.clear()
+        with self._lock:
+            self._mem.clear()
+            self._mem_lowered.clear()
 
     def __len__(self) -> int:
-        return len(self._mem)
+        with self._lock:
+            return len(self._mem)
 
 
 _default: Optional[MappingCache] = None

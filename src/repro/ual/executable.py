@@ -186,6 +186,19 @@ class Executable:
         self.last_info = info
         return outs
 
+    def run_batch_with_info(self, mems: Sequence[Dict[str, np.ndarray]],
+                            n_iters: Optional[int] = None, *,
+                            backend: Optional[str] = None
+                            ) -> Tuple[List[Dict[str, np.ndarray]],
+                                       Dict[str, object]]:
+        """``run_batch`` for concurrent sharers of one Executable: returns
+        ``(outputs, info)`` per call — wall time, batch size and
+        ``throughput_sps`` — WITHOUT publishing through ``last_info``, so
+        parallel callers (the execution service's workers, ``explore``
+        pools) never read another call's numbers."""
+        n = n_iters if n_iters is not None else self.program.n_iters
+        return self._execute_batch(mems, n, backend)
+
     # -- validation -----------------------------------------------------------
     def validate(self, seed: int = 0, n_iters: Optional[int] = None,
                  make_mem=None, backends: Optional[Sequence[str]] = None,

@@ -58,6 +58,12 @@ class CompileContext:
     cache_hit: bool = False
     restarts_paid: int = 0               # mapper restarts paid by THIS compile
     key: Optional[Tuple[str, str]] = None
+    #: the per-key compile lock, HELD, when this compile is the cold
+    #: winner for its key: acquired by the mapping pass before mapping,
+    #: kept through the lowering pass (so racing threads wait for the
+    #: whole mapping+lowering, paying exactly one of each), released by
+    #: ``Pipeline.run``'s finally
+    key_lock: Optional[object] = None
     records: List[PassRecord] = field(default_factory=list)
 
 
@@ -121,31 +127,57 @@ class MappingPass(CompilePass):
 
         key = (ctx.program.digest, target.digest)
         ctx.key = key
+
+        def _map() -> MapResult:
+            return map_dfg(ctx.program.laid, target.fabric,
+                           ii_max=target.ii_max, seed=target.seed,
+                           strategy=target.strategy,
+                           max_restarts=target.max_restarts,
+                           label_fn=target.label_fn,
+                           time_budget_s=target.time_budget_s)
+
         # targets carrying a label_fn always compile cold: the hook is
         # unhashable, so caching it would serve stale placements
         cacheable = ctx.use_cache and target.label_fn is None
-        c = None
-        if cacheable:
-            c = ctx.cache if ctx.cache is not None else default_cache()
-            result = c.get(key)
-            if result is not None:
-                ctx.result = result
-                ctx.cache_hit = True
-                return {"cache": "hit", "strategy": result.strategy,
-                        "II": result.II, "success": result.success}
-        result = map_dfg(ctx.program.laid, target.fabric,
-                         ii_max=target.ii_max, seed=target.seed,
-                         strategy=target.strategy,
-                         max_restarts=target.max_restarts,
-                         label_fn=target.label_fn,
-                         time_budget_s=target.time_budget_s)
+        if not cacheable:
+            result = _map()
+            ctx.restarts_paid = result.restarts
+            ctx.result = result
+            return {"cache": "bypass", "strategy": result.strategy,
+                    "II": result.II, "restarts": result.restarts,
+                    "success": result.success}
+        c = ctx.cache if ctx.cache is not None else default_cache()
+        result = c.get(key)
+        if result is not None:
+            ctx.result = result
+            ctx.cache_hit = True
+            return {"cache": "hit", "strategy": result.strategy,
+                    "II": result.II, "success": result.success}
+        # double-checked under the per-key lock: if another thread is
+        # compiling this very key right now, wait for its result instead
+        # of paying a second mapper run (uncounted peek — a hit here is
+        # an in-flight compile finishing, not a warm cache).  The cold
+        # winner KEEPS the lock through the lowering pass, so racers also
+        # wait out the lowering — one mapper run AND one lowering per key
+        lock = c.lock_key(key)
+        lock.acquire()
+        ctx.key_lock = lock              # released by Pipeline.run
+        result = c.peek(key)
+        if result is not None:
+            ctx.key_lock = None
+            lock.release()
+            ctx.result = result
+            ctx.cache_hit = True
+            return {"cache": "hit", "inflight": True,
+                    "strategy": result.strategy, "II": result.II,
+                    "success": result.success}
+        result = _map()
         ctx.restarts_paid = result.restarts
-        if cacheable:
-            c.put(key, result, memory_only=not result.success)
+        c.put(key, result, memory_only=not result.success)
         ctx.result = result
-        return {"cache": "miss" if cacheable else "bypass",
-                "strategy": result.strategy, "II": result.II,
-                "restarts": result.restarts, "success": result.success}
+        return {"cache": "miss", "strategy": result.strategy,
+                "II": result.II, "restarts": result.restarts,
+                "success": result.success}
 
 
 class LoweringPass(CompilePass):
@@ -169,24 +201,43 @@ class LoweringPass(CompilePass):
             return {"skipped": "no machine configuration"}
         cacheable = (ctx.use_cache and ctx.target.label_fn is None
                      and ctx.key is not None)
-        c = None
         # the fingerprint pins the tables to THIS configuration: the
         # budgeted mapper may produce a different config for the same key
         # (re-map after a lost mapping pickle, racing processes sharing
         # the disk dir), and stale tables must read as a miss
         fp = config_fingerprint(r.config)
-        if cacheable:
-            c = ctx.cache if ctx.cache is not None else default_cache()
+        if not cacheable:
+            ctx.lowered = link_config(r.config)
+            return {"cache": "bypass", "cm_bytes": ctx.lowered.cm_bytes()}
+        c = ctx.cache if ctx.cache is not None else default_cache()
+        if ctx.key_lock is not None:
+            # cold-compile winner: we still hold the key lock from the
+            # mapping pass, so nobody else can be lowering this key
             lowered = c.get_lowered(ctx.key, fp)
+            if lowered is None:
+                lowered = link_config(r.config)
+                c.put_lowered(ctx.key, lowered, fp)
+                ctx.lowered = lowered
+                return {"cache": "miss", "cm_bytes": lowered.cm_bytes()}
+            ctx.lowered = lowered
+            return {"cache": "hit", "cm_bytes": lowered.cm_bytes()}
+        lowered = c.get_lowered(ctx.key, fp)
+        if lowered is not None:
+            ctx.lowered = lowered
+            return {"cache": "hit", "cm_bytes": lowered.cm_bytes()}
+        # mapping was warm but the tables are not (fingerprint mismatch,
+        # lost lowered pickle): double-check under the per-key lock so
+        # concurrent re-lowerings still collapse to one
+        with c.lock_key(ctx.key):
+            lowered = c.peek_lowered(ctx.key, fp)
             if lowered is not None:
                 ctx.lowered = lowered
-                return {"cache": "hit", "cm_bytes": lowered.cm_bytes()}
-        lowered = link_config(r.config)
-        if cacheable:
+                return {"cache": "hit", "inflight": True,
+                        "cm_bytes": lowered.cm_bytes()}
+            lowered = link_config(r.config)
             c.put_lowered(ctx.key, lowered, fp)
         ctx.lowered = lowered
-        return {"cache": "miss" if cacheable else "bypass",
-                "cm_bytes": lowered.cm_bytes()}
+        return {"cache": "miss", "cm_bytes": lowered.cm_bytes()}
 
 
 class BindingPass(CompilePass):
@@ -217,11 +268,19 @@ class Pipeline:
     passes: List[CompilePass]
 
     def run(self, ctx: CompileContext) -> CompileContext:
-        for p in self.passes:
-            t0 = time.perf_counter()
-            stats = p.run(ctx)
-            ctx.records.append(
-                PassRecord(p.name, time.perf_counter() - t0, stats or {}))
+        try:
+            for p in self.passes:
+                t0 = time.perf_counter()
+                stats = p.run(ctx)
+                ctx.records.append(
+                    PassRecord(p.name, time.perf_counter() - t0, stats or {}))
+        finally:
+            # the cold winner's per-key compile lock (see CompileContext
+            # .key_lock) is released here even when a pass raises or a
+            # custom pipeline omits the lowering pass
+            if ctx.key_lock is not None:
+                lock, ctx.key_lock = ctx.key_lock, None
+                lock.release()
         return ctx
 
 

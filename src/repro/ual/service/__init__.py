@@ -1,0 +1,34 @@
+"""``repro.ual.service`` — the dynamic-batching CGRA execution service.
+
+PR 3 made ``Executable.run_batch`` 100x+ cheaper per sample than scalar
+runs — but only for callers who hand-assemble a batch.  Real serving
+traffic arrives one sample at a time, from many tenants, against many
+kernels.  This package decouples request arrival from fabric execution
+(the STRELA move, with Morpher's framing that the *platform* owns the
+orchestration):
+
+    queue -> coalesce -> batched sweep
+
+  * ``queue``     — admission: ``Request``/``Response`` futures, the
+    thread-safe FIFO, ``ServiceRejected`` for overload verdicts,
+  * ``coalescer`` — compatibility buckets keyed on
+    ``(program.digest, target.digest, backend, n_iters)``; flush on
+    ``max_batch`` or ``max_wait_ms``, whichever first,
+  * ``scheduler`` — ``Service`` itself: dispatcher + workers executing
+    each micro-batch as ONE ``run_batch`` sweep on shared warm
+    Executables (compiled through the mapping cache — a cold tenant pays
+    one mapping + one lowering, service-wide),
+  * ``metrics``   — the ``stats()`` surface: p50/p99 latency, achieved
+    batch size, samples/s, queue depth, rejects by reason.
+
+The public names re-exported at ``repro.ual`` are ``Service``,
+``Response`` and ``ServiceRejected``.
+"""
+from repro.ual.service.coalescer import Coalescer
+from repro.ual.service.metrics import ServiceMetrics
+from repro.ual.service.queue import (AdmissionQueue, Request, Response,
+                                     ServiceRejected)
+from repro.ual.service.scheduler import Service
+
+__all__ = ["AdmissionQueue", "Coalescer", "Request", "Response", "Service",
+           "ServiceMetrics", "ServiceRejected"]

@@ -1,0 +1,92 @@
+"""The service's metrics surface: what ``Service.stats()`` reports.
+
+One lock-guarded accumulator records every request outcome and every
+executed micro-batch.  Latency and batch-size samples live in bounded
+windows (``deque(maxlen=...)``) so a long-running service reports recent
+behavior at constant memory; counters (completed, samples, rejects by
+reason, per-tenant totals) are cumulative.
+
+``snapshot()`` folds the raw samples into the serving numbers that
+matter: p50/p99 request latency (submit -> resolve), achieved micro-batch
+size (mean/max — *the* dynamic-batching health number: 1.0 means the
+coalescer buys nothing), samples/s two ways (wall-clock service
+throughput since start, and engine throughput over sweep wall time
+alone), queue depth, and rejects keyed by reason.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class ServiceMetrics:
+    def __init__(self, window: int = 4096) -> None:
+        self._lock = threading.Lock()
+        self._lat_s: deque = deque(maxlen=window)
+        self._batch_sizes: deque = deque(maxlen=window)
+        self._t0 = time.perf_counter()
+        self.completed = 0          # requests resolved with outputs
+        self.samples = 0            # == completed (one sample per request)
+        self.batches = 0            # micro-batches executed
+        self.exec_wall_s = 0.0      # engine time across all sweeps
+        self.errors = 0             # requests whose batch raised mid-sweep
+        self.rejects: Dict[str, int] = {}
+        self.tenants: Dict[str, Dict[str, int]] = {}
+
+    def _tenant(self, tenant: str) -> Dict[str, int]:
+        return self.tenants.setdefault(tenant,
+                                       {"completed": 0, "rejected": 0})
+
+    def record_batch(self, size: int, wall_s: float) -> None:
+        with self._lock:
+            self.batches += 1
+            self.samples += size
+            self.exec_wall_s += wall_s
+            self._batch_sizes.append(size)
+
+    def record_completed(self, tenant: str, latency_s: float) -> None:
+        with self._lock:
+            self.completed += 1
+            self._lat_s.append(latency_s)
+            self._tenant(tenant)["completed"] += 1
+
+    def record_reject(self, tenant: str, reason: str) -> None:
+        with self._lock:
+            self.rejects[reason] = self.rejects.get(reason, 0) + 1
+            self._tenant(tenant)["rejected"] += 1
+
+    def record_error(self, n_requests: int) -> None:
+        with self._lock:
+            self.errors += n_requests
+
+    def snapshot(self, queue_depth: int = 0) -> Dict[str, object]:
+        with self._lock:
+            lat = np.asarray(self._lat_s, dtype=np.float64)
+            sizes = np.asarray(self._batch_sizes, dtype=np.float64)
+            elapsed = time.perf_counter() - self._t0
+            return {
+                "completed": self.completed,
+                "rejected": sum(self.rejects.values()),
+                "rejects": dict(self.rejects),
+                "errors": self.errors,
+                "queue_depth": queue_depth,
+                "batches": self.batches,
+                "p50_ms": (round(float(np.percentile(lat, 50)) * 1e3, 3)
+                           if lat.size else None),
+                "p99_ms": (round(float(np.percentile(lat, 99)) * 1e3, 3)
+                           if lat.size else None),
+                "mean_batch": (round(float(sizes.mean()), 2)
+                               if sizes.size else None),
+                "max_batch": int(sizes.max()) if sizes.size else None,
+                "samples_per_s": (round(self.samples / elapsed, 1)
+                                  if elapsed > 0 else 0.0),
+                "exec_samples_per_s": (round(self.samples / self.exec_wall_s,
+                                             1)
+                                       if self.exec_wall_s > 0 else 0.0),
+                "uptime_s": round(elapsed, 3),
+                "tenants": {t: dict(c) for t, c in self.tenants.items()},
+            }

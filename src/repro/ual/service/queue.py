@@ -1,0 +1,169 @@
+"""Admission layer of the execution service: requests, futures, the queue.
+
+A ``Request`` is one single-sample execution wish: a ``Program``, a
+``Target``, the named input arrays, and admission metadata (tenant,
+submit time, absolute deadline).  Requests are grouped by ``Request.key``
+— ``(program.digest, target.digest, backend, n_iters)`` — the exact
+compatibility class that can ride one ``run_batch`` sweep: same lowered
+artifact, same backend, same trip count.
+
+The caller gets a ``Response`` back immediately: a minimal Future —
+``result(timeout)`` blocks for the outputs, ``done()``/``exception()``
+inspect without blocking, and admission-control verdicts surface as
+``ServiceRejected`` (``response.rejected`` / ``response.reason``) so an
+overloaded or expired request is a *value*, not a lost thread.
+
+``AdmissionQueue`` is the thread-safe FIFO between ``submit()`` and the
+dispatcher.  It is deliberately unbounded here — the *service* enforces
+the bound by counting in-flight requests and rejecting at submit time
+(``queue-full``), which keeps the overload contract in one place instead
+of splitting it between two queues.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.ual.program import Program
+from repro.ual.target import Target
+
+
+class ServiceRejected(RuntimeError):
+    """The service declined a request; ``reason`` says why.
+
+    Raised out of ``Response.result()`` for admission-control verdicts:
+    ``queue-full`` (backpressure), ``deadline-exceeded`` (the request
+    aged out before execution), ``compile-failed`` (its key cannot map),
+    ``shutdown`` (the service stopped with the request still queued).
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"{reason}: {detail}" if detail else reason)
+        self.reason = reason
+
+
+class Response:
+    """Future-style handle for one submitted request.
+
+    ``result(timeout)`` blocks until the micro-batch carrying the request
+    has executed, then returns the named output arrays (same shape as
+    ``Executable.run``) or raises the failure.  ``info`` carries per-call
+    execution metadata once done (``latency_ms``, ``batch`` — the
+    achieved micro-batch size, ``throughput_sps`` of the sweep).
+    """
+
+    __slots__ = ("_event", "_out", "_exc", "info")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._out: Optional[Dict[str, np.ndarray]] = None
+        self._exc: Optional[BaseException] = None
+        self.info: Dict[str, object] = {}
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def rejected(self) -> bool:
+        """Whether admission control declined this request (vs. a normal
+        completion or an execution error)."""
+        return isinstance(self._exc, ServiceRejected)
+
+    @property
+    def reason(self) -> Optional[str]:
+        """The rejection reason, or None for accepted requests."""
+        return self._exc.reason if self.rejected else None
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError("response not ready")
+        return self._exc
+
+    def result(self, timeout: Optional[float] = None
+               ) -> Dict[str, np.ndarray]:
+        if not self._event.wait(timeout):
+            raise TimeoutError("response not ready")
+        if self._exc is not None:
+            raise self._exc
+        return self._out
+
+    # -- resolution (service-side) -------------------------------------------
+    def _resolve(self, out: Optional[Dict[str, np.ndarray]] = None,
+                 exc: Optional[BaseException] = None,
+                 **info: object) -> None:
+        self.info.update(info)
+        self._out = out
+        self._exc = exc
+        self._event.set()
+
+
+@dataclass
+class Request:
+    """One admitted single-sample request, en route to a micro-batch."""
+
+    tenant: str
+    program: Program
+    target: Target
+    mem: Dict[str, np.ndarray]
+    n_iters: int
+    t_submit: float                       # perf_counter at admission
+    deadline: Optional[float] = None      # absolute perf_counter, or None
+    response: Response = field(default_factory=Response)
+
+    @property
+    def key(self) -> Tuple[str, str, str, int]:
+        """The batching compatibility class: requests sharing this key
+        execute on one lowered artifact in one ``run_batch`` sweep."""
+        return (self.program.digest, self.target.digest,
+                self.target.backend, self.n_iters)
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
+
+
+class AdmissionQueue:
+    """Thread-safe FIFO between ``submit()`` and the dispatcher.
+
+    ``get(timeout)`` returns None on timeout so the dispatcher can wake
+    to flush aged micro-batches even when no new requests arrive.
+    """
+
+    def __init__(self) -> None:
+        self._dq: deque = deque()
+        self._cond = threading.Condition()
+
+    def put(self, item: object) -> None:
+        with self._cond:
+            self._dq.append(item)
+            self._cond.notify()
+
+    def get(self, timeout: Optional[float] = None) -> Optional[object]:
+        with self._cond:
+            if timeout is None:
+                while not self._dq:
+                    self._cond.wait()
+                return self._dq.popleft()
+            deadline = time.perf_counter() + timeout
+            while not self._dq:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    return None
+                self._cond.wait(remaining)
+            return self._dq.popleft()
+
+    def drain(self) -> List[object]:
+        """Non-blocking: everything currently queued, FIFO order."""
+        with self._cond:
+            items = list(self._dq)
+            self._dq.clear()
+            return items
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._dq)

@@ -1,0 +1,301 @@
+"""``Service`` — queue -> coalesce -> batched sweep.
+
+The serving layer the ROADMAP's north star asks for: callers submit
+*single-sample* requests and the platform — not each user — assembles the
+micro-batches that saturate the vectorized engines.  Three thread roles
+share the work:
+
+  * **submit()** (caller threads) — admission control: bound the
+    in-flight count (``queue-full`` rejection beats unbounded memory),
+    stamp tenant + deadline, hand a ``Response`` future back,
+  * **dispatcher** (one thread) — pull admitted requests into the
+    ``Coalescer``; dispatch a micro-batch when a compatibility bucket
+    fills to ``max_batch`` or its oldest request has waited
+    ``max_wait_ms``, whichever first,
+  * **workers** (``workers`` threads) — resolve the batch's shared warm
+    ``Executable`` (compiled through the mapping cache: a cold tenant
+    pays one mapping + one lowering, every later request rides the
+    artifact), drop requests whose deadline passed, run ONE
+    ``run_batch`` sweep, resolve every future.
+
+Executables are shared across workers — safe because execution info is
+returned per call (``Executable.run_batch_with_info``), never read back
+through ``last_info``.  ``stats()`` is the observability surface:
+p50/p99 latency, achieved batch size, samples/s, queue depth, rejects by
+reason, plus the mapping cache's aggregate view.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.ual.cache import MappingCache, default_cache
+from repro.ual.compiler import compile as ual_compile
+from repro.ual.executable import Executable
+from repro.ual.program import Program
+from repro.ual.service.coalescer import Coalescer
+from repro.ual.service.metrics import ServiceMetrics
+from repro.ual.service.queue import (AdmissionQueue, Request, Response,
+                                     ServiceRejected)
+from repro.ual.target import Target
+
+_STOP = object()
+
+#: dispatcher wake-up period while the coalescer is empty (no deadline to
+#: honor — this only bounds how fast a shutdown sentinel is noticed)
+_IDLE_TICK_S = 0.05
+
+
+class Service:
+    """Dynamic-batching execution service over the UAL.
+
+        svc = ual.Service(max_batch=32, max_wait_ms=5)
+        fut = svc.submit(program, target, A=a, B=b, tenant="gemm-app")
+        out = fut.result(timeout=30)      # named arrays, like exe.run
+        print(svc.stats())                # p50/p99, batch size, samples/s
+        svc.shutdown()
+
+    ``max_queue`` bounds admitted-but-unexecuted requests: past it,
+    ``submit`` returns an already-rejected future (``queue-full``)
+    instead of growing memory.  Deadlines (per request, per tenant via
+    ``deadlines_ms``, or service-wide via ``default_deadline_ms``) drop
+    requests that aged out before execution (``deadline-exceeded``).
+    """
+
+    def __init__(self, max_batch: int = 32, max_wait_ms: float = 2.0,
+                 max_queue: int = 1024, workers: int = 1,
+                 cache: Optional[MappingCache] = None,
+                 default_deadline_ms: Optional[float] = None,
+                 deadlines_ms: Optional[Dict[str, float]] = None,
+                 start: bool = True) -> None:
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.max_queue = max_queue
+        self.n_workers = workers
+        self.default_deadline_ms = default_deadline_ms
+        self.deadlines_ms = dict(deadlines_ms or {})
+        self._cache = cache
+
+        self._admission = AdmissionQueue()
+        self._coalescer = Coalescer(max_batch, max_wait_ms / 1e3)
+        self._batches = AdmissionQueue()
+        self._metrics = ServiceMetrics()
+
+        self._lock = threading.Lock()
+        self._pending = 0            # admitted, not yet handed to a worker
+        self._closed = False
+        self._started = False
+        self._exes: Dict[Tuple[str, str, str, int], Executable] = {}
+        self._threads: List[threading.Thread] = []
+        if start:
+            self.start()
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "Service":
+        # threads are created, started AND recorded under the lock:
+        # a shutdown() racing this sees either no service at all or the
+        # complete thread list, never a half-built one
+        with self._lock:
+            if self._started or self._closed:
+                return self
+            self._started = True
+            d = threading.Thread(target=self._dispatch_loop,
+                                 name="ual-service-dispatch", daemon=True)
+            d.start()
+            self._threads.append(d)
+            for i in range(self.n_workers):
+                w = threading.Thread(target=self._worker_loop,
+                                     name=f"ual-service-worker-{i}",
+                                     daemon=True)
+                w.start()
+                self._threads.append(w)
+        return self
+
+    def shutdown(self, timeout: Optional[float] = None) -> None:
+        """Stop admitting, flush every pending micro-batch, join threads.
+
+        Pending requests on a never-started service are rejected
+        (``shutdown``) rather than left unresolved.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            started = self._started
+        if not started:
+            for item in self._admission.drain():
+                with self._lock:
+                    self._pending -= 1
+                self._finish_rejected(item, "shutdown",
+                                      "service stopped before execution")
+            return
+        # the dispatcher enqueues the worker stop sentinels itself, after
+        # its final flush — so flushed batches always precede the
+        # sentinels in the batch FIFO even if this join times out early
+        self._admission.put(_STOP)
+        for t in self._threads:
+            t.join(timeout)
+
+    def __enter__(self) -> "Service":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- admission ------------------------------------------------------------
+    def submit(self, program: Program, target: Target,
+               mem: Optional[Dict[str, np.ndarray]] = None, *,
+               n_iters: Optional[int] = None, tenant: str = "default",
+               deadline_ms: Optional[float] = None,
+               **named: np.ndarray) -> Response:
+        """Admit one single-sample request; returns a ``Response`` future.
+
+        Arrays go in ``mem`` or as keywords (like ``Executable.run``).
+        Malformed arrays raise here, immediately — a typo is a caller
+        bug, not an overload, and must not poison a micro-batch.
+        Overload and shutdown come back as rejected futures.
+        """
+        arrays = dict(mem or {})
+        arrays.update(named)
+        program.check_arrays(arrays)
+        now = time.perf_counter()
+        dl_ms = deadline_ms
+        if dl_ms is None:
+            dl_ms = self.deadlines_ms.get(tenant, self.default_deadline_ms)
+        req = Request(tenant=tenant, program=program, target=target,
+                      mem=arrays, n_iters=(n_iters if n_iters is not None
+                                           else program.n_iters),
+                      t_submit=now,
+                      deadline=(now + dl_ms / 1e3 if dl_ms is not None
+                                else None))
+        with self._lock:
+            if self._closed:
+                return self._finish_rejected(req, "shutdown",
+                                             "service is shut down")
+            if self._pending >= self.max_queue:
+                return self._finish_rejected(
+                    req, "queue-full",
+                    f"{self._pending} requests in flight "
+                    f"(max_queue={self.max_queue})")
+            self._pending += 1
+            # enqueue under the lock: shutdown() sets _closed under this
+            # same lock before it sends the dispatcher its stop sentinel,
+            # so an admitted request always precedes the sentinel in the
+            # FIFO and can never be stranded unresolved by a racing stop
+            self._admission.put(req)
+        return req.response
+
+    def _finish_rejected(self, req: Request, reason: str,
+                         detail: str) -> Response:
+        self._metrics.record_reject(req.tenant, reason)
+        req.response._resolve(exc=ServiceRejected(reason, detail))
+        return req.response
+
+    # -- dispatcher -----------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            now = time.perf_counter()
+            for batch in self._coalescer.pop_expired(now):
+                self._batches.put(batch)
+            wait = self._coalescer.next_deadline(time.perf_counter())
+            timeout = _IDLE_TICK_S if wait is None else max(wait, 1e-4)
+            item = self._admission.get(timeout=timeout)
+            if item is _STOP:
+                break
+            if item is not None:
+                full = self._coalescer.offer(item)
+                if full is not None:
+                    self._batches.put(full)
+        # drain: late racers in admission, then every partial bucket
+        for item in self._admission.drain():
+            if item is not _STOP:
+                full = self._coalescer.offer(item)
+                if full is not None:
+                    self._batches.put(full)
+        for batch in self._coalescer.flush_all():
+            self._batches.put(batch)
+        for _ in range(self.n_workers):
+            self._batches.put(_STOP)
+
+    # -- workers --------------------------------------------------------------
+    def _worker_loop(self) -> None:
+        while True:
+            batch = self._batches.get()
+            if batch is _STOP:
+                break
+            self._run_batch(batch)
+
+    def _executable(self, req: Request) -> Executable:
+        """The shared warm Executable for a batch key, compiled through
+        the mapping cache.  Workers racing on a cold key may each call
+        ``compile``, but the cache's per-key compile lock collapses the
+        expensive work to one mapping + one lowering (losers get a cache
+        hit), so only the cheap Executable wrapper is ever duplicated."""
+        key = req.key
+        with self._lock:
+            exe = self._exes.get(key)
+        if exe is None:
+            exe = ual_compile(req.program, req.target, cache=self._cache)
+            with self._lock:
+                exe = self._exes.setdefault(key, exe)
+        return exe
+
+    def _run_batch(self, batch: List[Request]) -> None:
+        with self._lock:
+            self._pending -= len(batch)
+        now = time.perf_counter()
+        live = []
+        for req in batch:
+            if req.expired(now):
+                self._finish_rejected(req, "deadline-exceeded",
+                                      f"waited "
+                                      f"{(now - req.t_submit) * 1e3:.1f}ms")
+            else:
+                live.append(req)
+        if not live:
+            return
+        try:
+            exe = self._executable(live[0])
+            if not exe.success:
+                for req in live:
+                    self._finish_rejected(
+                        req, "compile-failed",
+                        f"{req.program.name} does not map onto "
+                        f"{req.target.fabric.name}")
+                return
+            outs, info = exe.run_batch_with_info(
+                [req.mem for req in live], n_iters=live[0].n_iters)
+        except Exception as exc:     # resolve, don't kill the worker
+            self._metrics.record_error(len(live))
+            for req in live:
+                req.response._resolve(exc=exc)
+            return
+        done = time.perf_counter()
+        self._metrics.record_batch(len(live), float(info.get("wall_s", 0.0)))
+        sps = info.get("throughput_sps")
+        for req, out in zip(live, outs):
+            latency = done - req.t_submit
+            self._metrics.record_completed(req.tenant, latency)
+            req.response._resolve(out, latency_ms=round(latency * 1e3, 3),
+                                  batch=len(live), throughput_sps=sps)
+
+    # -- observability --------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """The serving numbers: p50/p99 latency (ms), achieved batch size
+        (mean/max), samples/s, queue depth, rejects by reason, per-tenant
+        totals, warm executable count, and the mapping cache aggregate."""
+        with self._lock:
+            depth = self._pending
+            n_exes = len(self._exes)
+        snap = self._metrics.snapshot(queue_depth=depth)
+        snap["executables"] = n_exes
+        cache = self._cache if self._cache is not None else default_cache()
+        snap["cache"] = cache.stats()
+        return snap

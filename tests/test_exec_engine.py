@@ -13,9 +13,13 @@ The execution-path contract under test:
   * memory-port oversubscription is recorded in ``SimStats`` (worst
     cycle, ports used) even with ``check_ports=False``,
   * run/run_batch info is returned per call — ``last_info`` is only a
-    convenience copy, so shared Executables are reentrant.
+    convenience copy, so shared Executables are reentrant,
+  * concurrent compiles of one ``(program, target)`` digest pair pay
+    exactly one mapper run and one lowering (the cache's per-key compile
+    lock — what the execution service leans on for cold tenants).
 """
 import copy
+import threading
 
 import numpy as np
 import pytest
@@ -146,6 +150,52 @@ def test_lowered_cache_rejects_foreign_fingerprint(tmp_path):
     assert cache.stats.lowered_hits == 0         # mismatched tables: miss
     assert cache.stats.lowered_stores == 1       # re-lowered and re-pinned
     np.testing.assert_array_equal(warm.lowered.scalar, cold.lowered.scalar)
+
+
+def test_concurrent_compiles_map_and_lower_once(tmp_path, monkeypatch):
+    """Two threads compiling the same (program, target) digest pair must
+    produce exactly one mapper run and one lowering (monkeypatch-counted)
+    — the per-key compile lock extends the lower-once proof to thread
+    concurrency: the loser waits out the winner's mapping AND lowering
+    instead of redoing either."""
+    import repro.ual.pipeline as pl
+
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    target = ual.Target.from_name("hycube", rows=4, cols=4)
+
+    map_calls, lower_calls = [], []
+    real_map, real_link = pl.map_dfg, pl.link_config
+    monkeypatch.setattr(
+        pl, "map_dfg",
+        lambda *a, **k: map_calls.append(1) or real_map(*a, **k))
+    monkeypatch.setattr(
+        pl, "link_config",
+        lambda *a, **k: lower_calls.append(1) or real_link(*a, **k))
+
+    barrier = threading.Barrier(2)
+    exes = [None, None]
+
+    def compile_one(i):
+        barrier.wait()                       # maximize the race window
+        exes[i] = ual.compile(program, target, cache=cache)
+
+    threads = [threading.Thread(target=compile_one, args=(i,))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert len(map_calls) == 1
+    assert len(lower_calls) == 1
+    assert cache.stats.stores == 1 and cache.stats.lowered_stores == 1
+    assert all(e is not None and e.success for e in exes)
+    # one thread paid the cold compile, the other rode it — and both hold
+    # the very same artifacts
+    assert sorted(e.compile_info.cache_hit for e in exes) == [False, True]
+    np.testing.assert_array_equal(exes[0].lowered.scalar,
+                                  exes[1].lowered.scalar)
 
 
 def test_lowered_artifact_excluded_for_configless_executables():

@@ -1,0 +1,275 @@
+"""The dynamic-batching execution service: queue -> coalesce -> sweep.
+
+Contract under test:
+
+  * responses are bit-exact vs the DFG-interpreter oracle, whether a
+    request rode a full micro-batch or a clock-flushed partial one,
+  * requests only coalesce within their compatibility class
+    (program digest x target digest x backend x n_iters) — mixed-tenant
+    traffic batches per tenant kernel, never across,
+  * a cold tenant joining a running service pays exactly one mapping and
+    one lowering, even when its first requests land on several threads
+    at once (the per-key compile lock),
+  * overload produces bounded-queue rejections (``queue-full``) instead
+    of unbounded growth; expired deadlines reject (``deadline-exceeded``)
+    instead of executing; both surface as ``ServiceRejected`` values,
+  * shutdown flushes pending work; a never-started service rejects
+    rather than strands,
+  * ``stats()`` reports the serving numbers (p50/p99, achieved batch,
+    samples/s, queue depth, rejects by reason, per-tenant totals).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import ual
+from repro.core.dfg import interpret
+from repro.ual.service.coalescer import Coalescer
+
+
+def _program(kname="gemm"):
+    return ual.Program.from_kernel(kname)
+
+
+def _target(**knobs):
+    return ual.Target.from_name("hycube", rows=4, cols=4, **knobs)
+
+
+def _oracle(program, mem):
+    return interpret(program.dfg, mem, program.n_iters)
+
+
+# ---------------------------------------------------------------------------
+# correctness: oracle parity through the batching path
+# ---------------------------------------------------------------------------
+
+def test_single_request_matches_oracle():
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(0))
+    with ual.Service(max_batch=8, max_wait_ms=2) as svc:
+        resp = svc.submit(program, target, mem)
+        out = resp.result(timeout=300)
+    assert resp.done() and not resp.rejected
+    assert resp.info["batch"] >= 1 and resp.info["latency_ms"] > 0
+    expect = _oracle(program, mem)
+    for name in program.outputs:
+        np.testing.assert_array_equal(out[name], expect[name])
+
+
+def test_many_requests_coalesce_and_stay_bitexact():
+    program, target = _program(), _target()
+    rng = np.random.default_rng(1)
+    mems = [program.random_inputs(rng) for _ in range(24)]
+    with ual.Service(max_batch=8, max_wait_ms=50) as svc:
+        resps = [svc.submit(program, target, m) for m in mems]
+        outs = [r.result(timeout=300) for r in resps]
+        stats = svc.stats()
+    for mem, out in zip(mems, outs):
+        expect = _oracle(program, mem)
+        for name in program.outputs:
+            np.testing.assert_array_equal(out[name], expect[name])
+    assert stats["completed"] == 24
+    assert stats["mean_batch"] > 1          # the coalescer actually batched
+    assert stats["samples_per_s"] > 0
+    assert stats["p50_ms"] is not None and stats["p99_ms"] is not None
+
+
+def test_mixed_tenants_batch_within_their_class_only():
+    """gemm and fft requests share the service but never one sweep: each
+    response's achieved batch can only count requests of its own key."""
+    target = _target()
+    programs = {"gemm-app": _program("gemm"), "fft-app": _program("fft")}
+    rng = np.random.default_rng(2)
+    with ual.Service(max_batch=4, max_wait_ms=50) as svc:
+        inflight = []
+        for _ in range(8):
+            for tenant, program in programs.items():
+                mem = program.random_inputs(rng)
+                inflight.append((tenant, program, mem,
+                                 svc.submit(program, target, mem,
+                                            tenant=tenant)))
+        for tenant, program, mem, resp in inflight:
+            out = resp.result(timeout=300)
+            assert resp.info["batch"] <= 4
+            expect = _oracle(program, mem)
+            for name in program.outputs:
+                np.testing.assert_array_equal(out[name], expect[name])
+        stats = svc.stats()
+    assert stats["tenants"]["gemm-app"]["completed"] == 8
+    assert stats["tenants"]["fft-app"]["completed"] == 8
+    assert stats["executables"] == 2        # one warm Executable per class
+
+
+def test_different_n_iters_never_share_a_sweep():
+    program, target = _program(), _target()
+    rng = np.random.default_rng(3)
+    m1, m2 = program.random_inputs(rng), program.random_inputs(rng)
+    with ual.Service(max_batch=8, max_wait_ms=20) as svc:
+        r1 = svc.submit(program, target, m1)                 # default trip
+        r2 = svc.submit(program, target, m2, n_iters=4)      # shorter trip
+        out2 = r2.result(timeout=300)
+        r1.result(timeout=300)
+    expect2 = interpret(program.dfg, m2, 4)
+    for name in program.outputs:
+        np.testing.assert_array_equal(out2[name], expect2[name])
+
+
+# ---------------------------------------------------------------------------
+# cold tenant: exactly one mapping + one lowering, service-wide
+# ---------------------------------------------------------------------------
+
+def test_cold_tenant_compiles_once_under_concurrent_submits(tmp_path):
+    """A cold tenant's first requests arriving on several worker threads
+    must trigger exactly one mapper run and one lowering — counted by the
+    cache — with every response still oracle-exact."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program, target = _program(), _target()
+    rng = np.random.default_rng(4)
+    mems = [program.random_inputs(rng) for _ in range(12)]
+    # max_batch=1: every request becomes its own sweep, so with 3 workers
+    # several sweeps race to compile the cold key simultaneously
+    with ual.Service(max_batch=1, max_wait_ms=1, workers=3,
+                     cache=cache) as svc:
+        resps = [svc.submit(program, target, m) for m in mems]
+        outs = [r.result(timeout=300) for r in resps]
+    assert cache.stats.stores == 1
+    assert cache.stats.lowered_stores == 1
+    expect = _oracle(program, mems[0])
+    for name in program.outputs:
+        np.testing.assert_array_equal(outs[0][name], expect[name])
+
+
+# ---------------------------------------------------------------------------
+# backpressure, deadlines, shutdown
+# ---------------------------------------------------------------------------
+
+def test_overload_rejects_with_queue_full():
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(5))
+    svc = ual.Service(max_batch=8, max_queue=4, start=False)
+    accepted = [svc.submit(program, target, mem) for _ in range(4)]
+    overflow = [svc.submit(program, target, mem) for _ in range(3)]
+    for resp in overflow:
+        assert resp.done() and resp.rejected
+        assert resp.reason == "queue-full"
+        with pytest.raises(ual.ServiceRejected):
+            resp.result()
+    assert svc.stats()["queue_depth"] == 4  # bounded: never past max_queue
+    svc.shutdown()
+    # never-started: the queued requests reject rather than strand
+    for resp in accepted:
+        assert resp.done() and resp.reason == "shutdown"
+    stats = svc.stats()
+    assert stats["rejects"]["queue-full"] == 3
+    assert stats["rejects"]["shutdown"] == 4
+    assert stats["queue_depth"] == 0        # rejected slots were released
+
+
+def test_expired_deadline_rejects_instead_of_executing():
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(6))
+    svc = ual.Service(max_batch=8, max_wait_ms=1, start=False,
+                      deadlines_ms={"impatient": 1.0})
+    resp = svc.submit(program, target, mem, tenant="impatient")
+    time.sleep(0.05)                        # let the deadline lapse
+    svc.start()
+    with pytest.raises(ual.ServiceRejected):
+        resp.result(timeout=300)
+    assert resp.reason == "deadline-exceeded"
+    stats = svc.stats()
+    svc.shutdown()
+    assert stats["tenants"]["impatient"]["rejected"] == 1
+
+
+def test_submit_after_shutdown_rejects():
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(7))
+    svc = ual.Service(max_batch=4, max_wait_ms=1)
+    svc.submit(program, target, mem).result(timeout=300)
+    svc.shutdown()
+    resp = svc.submit(program, target, mem)
+    assert resp.rejected and resp.reason == "shutdown"
+
+
+def test_malformed_arrays_raise_at_submit():
+    """A typo'd array name is a caller bug: it must raise immediately at
+    submit, never reach (and poison) a micro-batch."""
+    program, target = _program(), _target()
+    with ual.Service(max_batch=4, max_wait_ms=1) as svc:
+        with pytest.raises(KeyError, match="unknown array"):
+            svc.submit(program, target, not_an_array=np.zeros(4,
+                                                              np.int32))
+
+
+def test_shutdown_flushes_partial_batches():
+    program, target = _program(), _target()
+    rng = np.random.default_rng(8)
+    mems = [program.random_inputs(rng) for _ in range(3)]
+    # max_wait far beyond the test: only the shutdown flush can run these
+    svc = ual.Service(max_batch=64, max_wait_ms=60_000)
+    resps = [svc.submit(program, target, m) for m in mems]
+    svc.shutdown()
+    for mem, resp in zip(mems, resps):
+        out = resp.result(timeout=1)
+        expect = _oracle(program, mem)
+        for name in program.outputs:
+            np.testing.assert_array_equal(out[name], expect[name])
+
+
+# ---------------------------------------------------------------------------
+# coalescer unit behavior (no threads)
+# ---------------------------------------------------------------------------
+
+class _FakeReq:
+    def __init__(self, key, t, deadline=None):
+        self.key, self.t_submit, self.deadline = key, t, deadline
+
+
+def test_coalescer_flushes_on_size_and_age():
+    co = Coalescer(max_batch=2, max_wait_s=1.0)
+    assert co.offer(_FakeReq("k1", 0.0)) is None
+    full = co.offer(_FakeReq("k1", 0.1))
+    assert full is not None and len(full) == 2      # size flush
+    assert co.pending() == 0
+
+    co.offer(_FakeReq("k2", 10.0))
+    assert co.pop_expired(10.5) == []               # not aged yet
+    assert co.next_deadline(10.5) == pytest.approx(0.5)
+    [aged] = co.pop_expired(11.0)                   # age flush
+    assert len(aged) == 1 and co.next_deadline(11.0) is None
+
+
+def test_coalescer_flushes_on_member_deadline():
+    """A member deadline pulls the bucket's flush earlier than max_wait,
+    so the deadline verdict is issued at the deadline, not minutes later."""
+    co = Coalescer(max_batch=8, max_wait_s=1000.0)
+    co.offer(_FakeReq("k", 0.0, deadline=2.0))
+    assert co.next_deadline(0.0) == pytest.approx(2.0)
+    assert co.pop_expired(1.9) == []
+    [due] = co.pop_expired(2.0)
+    assert len(due) == 1
+
+
+def test_deadline_bounds_rejection_latency_not_max_wait():
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(9))
+    with ual.Service(max_batch=64, max_wait_ms=60_000) as svc:
+        t0 = time.perf_counter()
+        resp = svc.submit(program, target, mem, deadline_ms=50)
+        with pytest.raises(ual.ServiceRejected):
+            resp.result(timeout=10)
+        waited = time.perf_counter() - t0
+    assert resp.reason == "deadline-exceeded"
+    assert waited < 5        # bounded by the deadline, not max_wait_ms
+
+
+def test_coalescer_keeps_keys_apart():
+    co = Coalescer(max_batch=3, max_wait_s=1.0)
+    co.offer(_FakeReq("a", 0.0))
+    co.offer(_FakeReq("b", 0.0))
+    co.offer(_FakeReq("a", 0.0))
+    assert co.pending() == 3
+    batches = co.flush_all()
+    assert sorted(len(b) for b in batches) == [1, 2]

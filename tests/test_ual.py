@@ -130,6 +130,32 @@ def test_cache_shared_across_backends(tmp_path):
     assert cache.stats.misses == 1 and cache.stats.hits == 1
 
 
+def test_cache_aggregate_stats_view(tmp_path):
+    """``cache.stats`` holds the raw counters; CALLING it —
+    ``cache.stats()`` — returns the aggregate view: hit/miss ratios and
+    on-disk entry counts for both the mapping and lowered tables."""
+    cache = ual.MappingCache(disk_dir=tmp_path / "ual")
+    program = ual.Program.from_kernel("gemm")
+    target = ual.Target.from_name("hycube", rows=4, cols=4)
+    ual.compile(program, target, cache=cache)          # cold: 1 miss
+    ual.compile(program, target, cache=cache)          # warm: 1 hit
+
+    agg = cache.stats()
+    assert set(agg) == {"mapping", "lowered"}
+    for layer in agg.values():
+        assert layer["lookups"] == 2
+        assert layer["hit_ratio"] == 0.5
+        assert layer["stores"] == 1
+        assert layer["disk_entries"] == 1              # one pair on disk
+    # the raw counters stay reachable exactly as before
+    assert cache.stats.hits == 1 and cache.stats.lowered_hits == 1
+
+    empty = ual.MappingCache(disk_dir=None)
+    agg = empty.stats()
+    assert agg["mapping"]["hit_ratio"] is None         # no lookups yet
+    assert agg["lowered"]["disk_entries"] == 0         # diskless
+
+
 def test_cache_keys_distinguish_targets(tmp_path):
     """Different fabrics / mapper knobs must not collide."""
     cache = ual.MappingCache(disk_dir=tmp_path / "ual")
