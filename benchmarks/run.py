@@ -9,8 +9,10 @@ paper claim is violated.
 ``--smoke`` skips the full benches and instead compiles one kernel per
 registered temporal fabric through the UAL, cache-cold then cache-warm,
 runs a B=16 batched-sim throughput check off the shared lowered artifact
-(oracle parity + nonzero samples/s), a 2-fabric x 2-strategy mini-sweep
-through ``compile_many(workers=2)``, and a dynamic-batching service gate
+(oracle parity + nonzero samples/s), a pallas JIT-engine gate (mixed-size
+batches through the persistent engine: oracle parity spot-check, trace
+count == bucket count), a 2-fabric x 2-strategy mini-sweep through
+``compile_many(workers=2)``, and a dynamic-batching service gate
 (32 requests through a ``max_batch=8`` ``ual.Service``, oracle parity
 spot-checked, nonzero samples/s) — a fast regression gate for the
 toolchain, mapping cache, execution engines, DSE front-end and serving
@@ -53,14 +55,16 @@ SMOKE_KERNEL = "gemm"
 
 def smoke() -> int:
     """Compile one kernel per fabric (cold + warm), validate on sim, run a
-    B=16 batched-sim throughput check, mini-sweep 2 fabrics x
+    B=16 batched-sim throughput check, push mixed-size batches through
+    the pallas persistent JIT engine, mini-sweep 2 fabrics x
     2 strategies through ``compile_many(workers=2)``, then push 32
     single-sample requests through a ``max_batch=8`` ``ual.Service``.
 
     Exit non-zero if any compile fails, any validation mismatches, the
     warm compile misses the cache, the batched engine loses oracle parity
-    or reports zero throughput, the sweep pays redundant mappings, or the
-    service gate loses parity / reports zero samples/s.
+    or reports zero throughput, the JIT engine loses parity or retraces
+    on a warm bucket, the sweep pays redundant mappings, or the service
+    gate loses parity / reports zero samples/s.
     Writes ``artifacts/bench/smoke.json`` (uploaded by CI).
     """
     import numpy as np
@@ -216,9 +220,59 @@ def smoke() -> int:
               f"{sps} samples/s, mean batch {stats['mean_batch']}, "
               f"parity={'ok' if parity else 'FAIL'} ==")
 
+    # -- pallas engine gate: mixed-size batches through the persistent
+    # JIT engine; parity spot-check vs the oracle, trace count must equal
+    # the number of distinct buckets touched (trace-once/run-many).
+    # Runs LAST: this is the smoke's first jax use, and the fork-based
+    # mini-sweep above must spawn its workers before jax starts threads
+    engine_json = None
+    with tempfile.TemporaryDirectory() as d:
+        from repro.core.dfg import interpret
+        ecache = ual.MappingCache(disk_dir=d)
+        target = ual.Target.from_name("hycube", rows=4, cols=4,
+                                      backend="pallas")
+        program = ual.Program.from_kernel(
+            SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports, bank_words=64)
+        exe = ual.compile(program, target, cache=ecache)
+        engine = ual.CompiledKernelCache()
+        prev_engine = ual.set_default_engine(engine)
+        try:
+            if not exe.success:
+                failures.append("pallas engine: compile failed")
+            else:
+                rng = np.random.default_rng(3)
+                mems = [program.random_inputs(rng) for _ in range(12)]
+                out_a = exe.run_batch(mems[:3])    # bucket 8
+                out_b = exe.run_batch(mems)        # bucket 32
+                exe.run_batch(mems[3:8])           # bucket 8, warm
+                stats = engine.stats()
+                parity = all(
+                    np.array_equal(interpret(program.dfg, m,
+                                             program.n_iters)[n], o[n])
+                    for m, o in ((mems[0], out_a[0]), (mems[11], out_b[11]))
+                    for n in program.outputs)
+                eng = engine.engine_for(exe.lowered)
+                n_buckets = len(eng.bucket_calls)
+                if not parity:
+                    failures.append("pallas engine: oracle parity mismatch")
+                if stats["traces"] != n_buckets:
+                    failures.append(
+                        f"pallas engine: {stats['traces']} traces for "
+                        f"{n_buckets} buckets (retrace on the warm path)")
+                engine_json = {"batches": [3, 12, 5], "parity": parity,
+                               "traces": stats["traces"],
+                               "buckets_used": sorted(eng.bucket_calls),
+                               "hit_ratio": stats["hit_ratio"]}
+                print(f"\n== smoke: pallas JIT engine, 3 mixed-size "
+                      f"batches: {stats['traces']} traces / "
+                      f"{n_buckets} buckets, "
+                      f"parity={'ok' if parity else 'FAIL'} ==")
+        finally:
+            ual.set_default_engine(prev_engine)
+
     save("smoke", {"fabrics": rows, "sweep": sweep_json,
-                   "batched_sim": batched_json, "service": service_json,
-                   "failures": failures})
+                   "batched_sim": batched_json, "pallas_engine": engine_json,
+                   "service": service_json, "failures": failures})
     for f in failures:
         print(f"FAIL {f}")
     return 1 if failures else 0

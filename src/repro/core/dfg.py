@@ -500,3 +500,44 @@ def unflatten_memory(layout: DataLayout, flat: np.ndarray,
                      arrays: Dict[str, int]) -> Dict[str, np.ndarray]:
     return {name: flat[layout.bases[name]:layout.bases[name] + ln].copy()
             for name, ln in arrays.items()}
+
+
+def flat_memory_batch(layout: DataLayout,
+                      mems: List[Dict[str, np.ndarray]]) -> np.ndarray:
+    """Batched ``flat_memory``: B named-array dicts -> (B, total_words).
+
+    One allocation and one vectorized assignment per *array name* instead
+    of a Python loop over samples — the hot path of every natively-batched
+    backend.  Samples may still omit arrays (zero-filled) or pass short
+    arrays; only such ragged names fall back to a per-sample copy.
+    """
+    B = len(mems)
+    flat = np.zeros((B, layout.total_words), INT)
+    for name, base in layout.bases.items():
+        rows = [m.get(name) for m in mems]
+        present = [r for r in rows if r is not None]
+        if not present:
+            continue
+        lens = {len(r) for r in present}
+        if len(present) == B and len(lens) == 1:
+            ln = lens.pop()
+            flat[:, base:base + ln] = np.asarray(rows, dtype=INT)
+        else:                                    # ragged / missing: per row
+            for b, r in enumerate(rows):
+                if r is not None:
+                    flat[b, base:base + len(r)] = np.asarray(r, dtype=INT)
+    return flat
+
+
+def unflatten_memory_batch(layout: DataLayout, flats: np.ndarray,
+                           arrays: Dict[str, int]
+                           ) -> List[Dict[str, np.ndarray]]:
+    """Batched ``unflatten_memory``: (B, total_words) -> B dicts.
+
+    One contiguous copy per array name; the per-sample dicts share those
+    copies as row views (callers treat outputs as read-only snapshots,
+    exactly like the scalar path's fresh arrays)."""
+    cols = {name: flats[:, layout.bases[name]:layout.bases[name] + ln].copy()
+            for name, ln in arrays.items()}
+    return [{name: col[b] for name, col in cols.items()}
+            for b in range(flats.shape[0])]

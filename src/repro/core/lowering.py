@@ -68,10 +68,38 @@ class LinkedConfig:
         return {k: v for k, v in self.__dict__.items()
                 if not k.startswith("_")}
 
-    def total_cycles(self, n_iters: int) -> int:
+    @property
+    def t0_max(self) -> int:
+        """Latest issue slot in the schedule (static: a table property)."""
         t0 = self.scalar[:, :, 3]
-        t_max = int(t0.max()) if (t0 >= 0).any() else 0
-        return t_max + n_iters * self.II + self.II + 2
+        return int(t0.max()) if (t0 >= 0).any() else 0
+
+    def total_cycles(self, n_iters: int) -> int:
+        return self.t0_max + n_iters * self.II + self.II + 2
+
+
+def lowered_fingerprint(linked: LinkedConfig) -> str:
+    """Content hash of the dense tables themselves.
+
+    Identifies a lowered artifact independently of how it was produced —
+    the persistent JIT execution engine (``ual.engine``) keys its trace
+    cache on it, so two Executables sharing one artifact (same mapping,
+    different Program wrappers) also share every compiled trace.  Memoized
+    on the instance (underscore attribute: excluded from cache pickles by
+    ``LinkedConfig.__getstate__``).
+    """
+    fp = getattr(linked, "_fingerprint", None)
+    if fp is None:
+        import hashlib
+        h = hashlib.sha256()
+        h.update(f"{LOWERING_VERSION}:{linked.II}:{linked.n_pes}:"
+                 f"{linked.n_regs}:{linked.mem_pes}:"
+                 f"{linked.n_mem_ports}".encode())
+        for a in (linked.scalar, linked.ops, linked.regw):
+            h.update(np.ascontiguousarray(a).tobytes())
+        fp = h.hexdigest()
+        linked._fingerprint = fp
+    return fp
 
 
 def config_fingerprint(cfg: MachineConfig) -> str:

@@ -20,6 +20,14 @@ so a 1:1 port would waste the TPU.  Instead:
 
 Grid: (batch_tiles,) — each grid step simulates ``total_cycles`` of the
 whole fabric for one batch tile via ``fori_loop`` carrying (O, R, mem).
+
+``n_iters`` is a *traced* scalar (a ``(1, 1)`` int32 operand, read inside
+the kernel): the cycle count becomes a dynamic ``fori_loop`` bound and
+per-PE firing is masked on the traced iteration count, so ONE trace of the
+kernel serves every iteration count — the property the persistent JIT
+engine (``repro.ual.engine``) builds its trace-once/run-many cache on.
+``make_cgra_call`` is the shared constructor of the ``pallas_call``; both
+the one-shot ``cgra_exec`` wrapper and the engine go through it.
 """
 from __future__ import annotations
 
@@ -71,10 +79,12 @@ def _alu(opc, v0, v1, v2, const, use_const_mask):
     return out
 
 
-def _cgra_kernel(scalar_ref, ops_ref, regw_ref, mem_in_ref, mem_out_ref, *,
-                 II: int, n_pes: int, n_regs: int, mem_pes, n_iters: int,
-                 total_cycles: int):
+def _cgra_kernel(niter_ref, scalar_ref, ops_ref, regw_ref, mem_in_ref,
+                 mem_out_ref, *, II: int, n_pes: int, n_regs: int, mem_pes,
+                 t_max: int):
     P, R = n_pes, n_regs
+    n_iters = niter_ref[0, 0]           # traced: one trace, any trip count
+    total_cycles = t_max + (n_iters + 1) * II + 2
     scalar = scalar_ref[...]            # (S, P, 4)
     optab = ops_ref[...]                # (S, P, 3, 5)
     rwtab = regw_ref[...]               # (S, P, R, 3)
@@ -160,35 +170,53 @@ def _cgra_kernel(scalar_ref, ops_ref, regw_ref, mem_in_ref, mem_out_ref, *,
     mem_out_ref[...] = mem
 
 
-def cgra_exec(linked: LinkedConfig, mem: jax.Array, n_iters: int, *,
-              lanes: int = 128, interpret: bool = False) -> jax.Array:
-    """Execute ``linked`` for ``n_iters`` iterations over mem (B, M) int32.
+def make_cgra_call(linked: LinkedConfig, *, M: int, bB: int,
+                   n_tiles: int = 1, interpret: bool = False):
+    """Build the ``pallas_call`` executing ``linked`` over ``n_tiles``
+    batch tiles of ``bB`` lanes each.
 
-    Returns the final scratchpad images, (B, M) int32.
+    Returns a callable ``(niter, scalar, ops, regw, memT) -> memT'`` where
+    ``niter`` is a (1, 1) int32 array (the traced trip count), the tables
+    are the dense linked images and ``memT`` is the (M, n_tiles * bB)
+    transposed scratchpad block.  Everything *shape-like* (tile geometry,
+    table dims, the schedule's ``t0_max``) is static; the trip count is
+    not — one trace serves every ``n_iters``.
     """
-    B, M = mem.shape
-    bB = min(lanes, max(8, B))
-    pad = (-B) % bB
-    memT = jnp.pad(mem, ((0, pad), (0, 0))).T.astype(I32)     # (M, B')
-    total = linked.total_cycles(n_iters)
     kernel = functools.partial(
         _cgra_kernel, II=linked.II, n_pes=linked.n_pes,
-        n_regs=linked.n_regs, mem_pes=linked.mem_pes, n_iters=n_iters,
-        total_cycles=total)
-    S, P = linked.II, linked.n_pes
-    R = linked.n_regs
-    out = pl.pallas_call(
+        n_regs=linked.n_regs, mem_pes=linked.mem_pes, t_max=linked.t0_max)
+    S, P, R = linked.II, linked.n_pes, linked.n_regs
+    return pl.pallas_call(
         kernel,
-        grid=((B + pad) // bB,),
+        grid=(n_tiles,),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((S, P, 4), lambda i: (0, 0, 0)),
             pl.BlockSpec((S, P, 3, 5), lambda i: (0, 0, 0, 0)),
             pl.BlockSpec((S, P, R, 3), lambda i: (0, 0, 0, 0)),
             pl.BlockSpec((M, bB), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((M, bB), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((M, B + pad), I32),
+        out_shape=jax.ShapeDtypeStruct((M, n_tiles * bB), I32),
         interpret=interpret,
-    )(jnp.asarray(linked.scalar), jnp.asarray(linked.ops),
-      jnp.asarray(linked.regw), memT)
+    )
+
+
+def cgra_exec(linked: LinkedConfig, mem: jax.Array, n_iters, *,
+              lanes: int = 128, interpret: bool = False) -> jax.Array:
+    """Execute ``linked`` for ``n_iters`` iterations over mem (B, M) int32.
+
+    Returns the final scratchpad images, (B, M) int32.  One-shot wrapper:
+    builds the ``pallas_call`` per invocation — steady-state callers go
+    through the persistent JIT engine (``repro.ual.engine``) instead.
+    """
+    B, M = mem.shape
+    bB = min(lanes, max(8, B))
+    pad = (-B) % bB
+    memT = jnp.pad(mem, ((0, pad), (0, 0))).T.astype(I32)     # (M, B')
+    call = make_cgra_call(linked, M=M, bB=bB, n_tiles=(B + pad) // bB,
+                          interpret=interpret)
+    out = call(jnp.asarray(n_iters, I32).reshape(1, 1),
+               jnp.asarray(linked.scalar), jnp.asarray(linked.ops),
+               jnp.asarray(linked.regw), memT)
     return out.T[:B]

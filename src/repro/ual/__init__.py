@@ -33,6 +33,12 @@ Vocabulary:
     reports throughput (``last_info["throughput_sps"]``),
   * ``compile_many``/``explore`` — grid compilation over a process pool
     with cache-aware dedup, and the Pareto DSE front-end on top of it,
+  * ``CompiledKernelCache``/``default_engine`` — the persistent JIT
+    execution engine behind the ``pallas`` backend
+    (``repro.ual.engine``): linked tables device-resident per engine,
+    ``n_iters`` traced, batch sizes padded up a bucket ladder — trace
+    once, run many (``Executable.warmup(buckets=...)`` pre-traces the
+    ladder),
   * ``Service``  — the dynamic-batching execution service
     (``repro.ual.service``): single-sample requests are queued, coalesced
     into micro-batches per ``(program.digest, target.digest)`` class and
@@ -58,6 +64,9 @@ from repro.ual.cache import (CACHE_VERSION, CacheStats, MappingCache,
                              default_cache, default_cache_dir,
                              set_default_cache)
 from repro.ual.compiler import compile
+from repro.ual.engine import (CompiledKernelCache, KernelEngine,
+                              bucket_ladder, default_engine,
+                              set_default_engine)
 from repro.ual.executable import CompileInfo, Executable, PassRecord
 from repro.ual.explore import (DesignPoint, ExploreReport, compile_many,
                                explore)
@@ -69,13 +78,14 @@ from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 
 __all__ = [
     "Backend", "CACHE_VERSION", "CacheStats", "CompileContext",
-    "CompileInfo", "CompilePass", "DesignPoint", "Executable",
-    "ExploreReport", "FABRICS", "LinkedConfig", "MapperStrategy",
-    "MappingCache", "PassRecord", "Pipeline", "Program", "Response",
-    "Service", "ServiceRejected", "Target",
-    "compile", "compile_many", "default_cache", "default_cache_dir",
-    "default_pipeline", "explore", "get_backend", "link_config",
-    "list_backends", "list_fabrics", "list_strategies",
-    "register_backend", "register_fabric", "register_strategy",
-    "set_default_cache",
+    "CompileInfo", "CompiledKernelCache", "CompilePass", "DesignPoint",
+    "Executable", "ExploreReport", "FABRICS", "KernelEngine",
+    "LinkedConfig", "MapperStrategy", "MappingCache", "PassRecord",
+    "Pipeline", "Program", "Response", "Service", "ServiceRejected",
+    "Target",
+    "bucket_ladder", "compile", "compile_many", "default_cache",
+    "default_cache_dir", "default_engine", "default_pipeline", "explore",
+    "get_backend", "link_config", "list_backends", "list_fabrics",
+    "list_strategies", "register_backend", "register_fabric",
+    "register_strategy", "set_default_cache", "set_default_engine",
 ]

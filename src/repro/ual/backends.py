@@ -8,7 +8,9 @@ arrays.  Three ship with the repo:
   * ``sim``     — the vectorized, natively-batched simulator executing
     the lowered configuration tables (``core.simulator.simulate_batch``),
   * ``pallas``  — the Pallas ``cgra_exec`` TPU kernel executing the same
-    tables (batched; interpret-mode on CPU).
+    tables (batched; interpret-mode on CPU) through the persistent JIT
+    engine (``repro.ual.engine``): trace-once/run-many with batch-bucket
+    padding, tables device-resident per engine, ``n_iters`` traced.
 
 ``sim`` and ``pallas`` both consume the shared **lowered artifact**
 (``core.lowering.LinkedConfig``) produced once by the compile pipeline's
@@ -73,6 +75,15 @@ class InterpBackend(Backend):
         return interpret(program.dfg, mem, n_iters), {}
 
 
+def _ensure_lowered(result, lowered):
+    """The shared artifact, or (for callers bypassing the pipeline) the
+    per-process fingerprint memo — no path lowers one config twice."""
+    if lowered is not None:
+        return lowered
+    from repro.kernels.cgra_exec.ops import _memoized_link
+    return _memoized_link(result.config)
+
+
 class SimBackend(Backend):
     """Vectorized, natively-batched simulation of the lowered tables.
 
@@ -84,55 +95,67 @@ class SimBackend(Backend):
 
     consumes_lowered = True
 
-    @staticmethod
-    def _linked(result, lowered):
-        if lowered is not None:
-            return lowered
-        from repro.core.lowering import link_config
-        return link_config(result.config)
-
     def execute(self, program, result, mem, n_iters, lowered=None):
         from repro.core.simulator import simulate_batch
         flat = program.flatten(mem)
-        out, stats = simulate_batch(self._linked(result, lowered),
+        out, stats = simulate_batch(_ensure_lowered(result, lowered),
                                     flat[None], n_iters)
         return program.unflatten(out[0]), {"sim_stats": stats,
                                            "engine": "vectorized"}
 
     def execute_batch(self, program, result, mems, n_iters, lowered=None):
         from repro.core.simulator import simulate_batch
-        flats = np.stack([program.flatten(m) for m in mems])
-        outs, stats = simulate_batch(self._linked(result, lowered),
+        flats = program.flatten_batch(mems)
+        outs, stats = simulate_batch(_ensure_lowered(result, lowered),
                                      flats, n_iters)
-        return ([program.unflatten(o) for o in outs],
+        return (program.unflatten_batch(outs),
                 {"sim_stats": stats, "engine": "vectorized", "batched": True})
 
 
 class PallasBackend(Backend):
-    """Pallas ``cgra_exec`` TPU kernel (interpret-mode on CPU)."""
+    """Pallas ``cgra_exec`` TPU kernel (interpret-mode on CPU), executed
+    through the persistent JIT engine (``repro.ual.engine``): the linked
+    tables live on device per engine, ``n_iters`` is traced, and batch
+    sizes are padded up the bucket ladder so repeat traffic hits warm
+    traces — trace once, run many.
+    """
 
     consumes_lowered = True
 
-    def __init__(self, lanes: int = 128, interpret: bool = True):
+    def __init__(self, lanes: int = 128, interpret: bool = True,
+                 engine=None):
         self.lanes = lanes
         self.interpret = interpret
+        self._engine = engine        # None -> the process-wide engine cache
 
-    def _run(self, program, result, flats: np.ndarray, n_iters: int,
-             lowered):
-        from repro.kernels.cgra_exec.ops import cgra_exec_op
-        return cgra_exec_op(result.config, flats, n_iters,
-                            lanes=self.lanes, interpret=self.interpret,
-                            linked=lowered)
+    @property
+    def engine(self):
+        if self._engine is not None:
+            return self._engine
+        from repro.ual.engine import default_engine
+        return default_engine()
 
     def execute(self, program, result, mem, n_iters, lowered=None):
-        flat = program.flatten(mem)
-        out = self._run(program, result, flat[None], n_iters, lowered)[0]
-        return program.unflatten(out), {}
+        outs, info = self.execute_batch(program, result, [mem], n_iters,
+                                        lowered=lowered)
+        return outs[0], info
 
     def execute_batch(self, program, result, mems, n_iters, lowered=None):
-        flats = np.stack([program.flatten(m) for m in mems])
-        outs = self._run(program, result, flats, n_iters, lowered)
-        return [program.unflatten(o) for o in outs], {"batched": True}
+        flats = program.flatten_batch(mems)
+        out, info = self.engine.run(_ensure_lowered(result, lowered), flats,
+                                    n_iters, lanes=self.lanes,
+                                    interpret=self.interpret)
+        info["batched"] = True
+        return program.unflatten_batch(out), info
+
+    def warmup(self, program, result, lowered=None, buckets=None):
+        """Pre-trace the bucket ladder for this program's scratchpad width
+        (``n_iters`` is traced, so one trace per bucket covers every trip
+        count).  Returns the engine's stats."""
+        eng = self.engine.engine_for(_ensure_lowered(result, lowered),
+                                     lanes=self.lanes,
+                                     interpret=self.interpret)
+        return eng.warmup(program.layout.total_words, buckets)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,310 @@
+"""Persistent JIT execution engine: trace-once / run-many for the pallas path.
+
+The ``pallas`` backend used to pay full tracing + lowering cost on every
+call — ``cgra_exec`` rebuilt its ``pallas_call`` per invocation with the
+batch size and trip count baked in as Python constants, and re-uploaded
+the linked tables each time.  The paper's abstraction-layer bet (and
+HyCUBE's CM-resident-on-chip bet, Morpher's map-once/simulate-many split)
+is the opposite: produce the compiled artifact ONCE, execute it many
+times.  This module is that half of the story:
+
+  * ``CompiledKernelCache`` — the engine registry, keyed on
+    ``(lowered fingerprint, backend opts)`` with per-``(M, bucket)`` trace
+    entries below that: the full key of one compiled trace is
+    ``(lowering fingerprint, backend opts, batch bucket)``,
+  * each ``KernelEngine`` wraps the shared ``cgra_exec`` kernel body in
+    ONE ``jax.jit`` with the linked tables uploaded to device once and
+    closed over as constants (the CM-in-VMEM analogue at the host level),
+  * ``n_iters`` is a *traced* scalar operand (dynamic ``fori_loop`` bound
+    + fired-masking inside the kernel), so one trace serves every
+    iteration count,
+  * batch sizes are padded up a small **bucket ladder** (default
+    ``1, 8, 32, lanes``): the execution service's variable-sized
+    micro-batches hit warm traces instead of retracing per shape, and
+    batches beyond the largest bucket run as warm largest-bucket chunks —
+    the trace count stays O(#buckets) no matter how traffic is shaped.
+
+Observability: every engine counts traces, calls, per-bucket hits and
+padding waste; ``CompiledKernelCache.stats()`` aggregates them (the
+execution service surfaces this in ``Service.stats()["engine"]``, and
+``Executable.warmup()`` reports it in ``last_info``).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lowering import LinkedConfig, lowered_fingerprint
+
+
+def make_cgra_call(*args, **kwargs):
+    """Lazy indirection to the shared ``pallas_call`` constructor: keeps
+    ``import repro.ual`` free of the jax import (fork-based tooling like
+    ``compile_many`` must be able to spawn workers before jax starts its
+    threads), while tests can still monkeypatch-count traces here."""
+    from repro.kernels.cgra_exec.kernel import make_cgra_call as real
+    return real(*args, **kwargs)
+
+
+def bucket_ladder(lanes: int = 128,
+                  buckets: Optional[Sequence[int]] = None) -> Tuple[int, ...]:
+    """The batch-size ladder: ascending, deduplicated, capped at ``lanes``
+    (one VPU tile — bigger batches run as warm largest-bucket chunks)."""
+    if buckets is None:
+        buckets = (1, 8, 32, lanes)
+    ladder = sorted({int(b) for b in buckets if 1 <= int(b) <= lanes})
+    if not ladder:
+        raise ValueError(f"bucket ladder {buckets!r} has no entry in "
+                         f"[1, lanes={lanes}]")
+    return tuple(ladder)
+
+
+class KernelEngine:
+    """One persistent engine: a lowered artifact + backend opts.
+
+    Owns the device-resident tables (uploaded once, closed over as jit
+    constants) and the single jitted entry point; ``jax.jit`` specializes
+    it per ``(M, bucket)`` shape, and the ladder keeps that set small.
+    """
+
+    def __init__(self, linked: LinkedConfig, *, lanes: int = 128,
+                 interpret: bool = True,
+                 buckets: Optional[Sequence[int]] = None) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        self.linked = linked
+        self.lanes = lanes
+        self.interpret = interpret
+        self.buckets = bucket_ladder(lanes, buckets)
+        self.fingerprint = lowered_fingerprint(linked)
+        # upload the CM image once per engine; every trace closes over
+        # these device arrays as constants — never re-fed per call
+        self._tables = tuple(
+            jax.device_put(jnp.asarray(t, jnp.int32))
+            for t in (linked.scalar, linked.ops, linked.regw))
+        self._jnp = jnp
+        # counters: traces bumps at TRACE time (a Python side effect of
+        # the traced function), so it counts actual retraces, not calls.
+        # Two locks: _trace_lock serializes cold traces (held for seconds),
+        # _stats_lock guards the counters and the warm-shape set (held for
+        # nanoseconds) so concurrent Service workers never lose an update
+        # and stats() never iterates a mutating set
+        self.traces = 0
+        self.calls = 0
+        self.samples = 0
+        self.padded_samples = 0
+        self.bucket_calls: Dict[int, int] = {}
+        self._warm: set = set()              # (M, bucket) already traced
+        self._trace_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._fn = jax.jit(self._traced)
+
+    # -- the traced function --------------------------------------------------
+    def _traced(self, niter, mem):
+        """``mem`` is one padded (bucket, M) block; retraced per shape."""
+        self.traces += 1
+        bucket, M = mem.shape
+        call = make_cgra_call(self.linked, M=M, bB=bucket, n_tiles=1,
+                              interpret=self.interpret)
+        return call(niter, *self._tables, mem.T).T
+
+    # -- execution ------------------------------------------------------------
+    def bucket_for(self, b: int) -> int:
+        """Smallest ladder bucket >= b (callers chunk at the largest)."""
+        for bk in self.buckets:
+            if bk >= b:
+                return bk
+        return self.buckets[-1]
+
+    def _call_block(self, block: np.ndarray, niter
+                    ) -> Tuple[np.ndarray, bool]:
+        """One padded (bucket, M) block through the jitted entry point;
+        cold ``(M, bucket)`` shapes trace under the trace lock so
+        concurrent workers pay exactly one trace per bucket.  Returns
+        ``(out, was_cold)`` — cold means THIS call found the shape
+        untraced (info attribution stays per-call under concurrency)."""
+        key = (block.shape[1], block.shape[0])
+        with self._stats_lock:
+            warm = key in self._warm
+        if warm:
+            return np.asarray(self._fn(niter, self._jnp.asarray(block))), \
+                False
+        with self._trace_lock:
+            out = np.asarray(self._fn(niter, self._jnp.asarray(block)))
+            with self._stats_lock:
+                self._warm.add(key)
+        return out, True
+
+    def run(self, flats: np.ndarray, n_iters: int
+            ) -> Tuple[np.ndarray, Dict[str, object]]:
+        """Execute a (B, M) batch of scratchpad images for ``n_iters``.
+
+        Pads each chunk up the bucket ladder (B > largest bucket runs as
+        warm largest-bucket chunks) and slices the padding back off;
+        returns ``(out (B, M), per-call info)``.
+        """
+        jnp = self._jnp
+        flats = np.ascontiguousarray(flats, np.int32)
+        B, M = flats.shape
+        niter = jnp.asarray(n_iters, jnp.int32).reshape(1, 1)
+        out = np.empty((B, M), np.int32)
+        used: List[int] = []
+        cold_blocks = 0
+        top = self.buckets[-1]
+        i = 0
+        while i < B:
+            chunk = min(B - i, top)
+            bucket = self.bucket_for(chunk)
+            block = flats[i:i + chunk]
+            if bucket != chunk:
+                block = np.concatenate(
+                    [block, np.zeros((bucket - chunk, M), np.int32)])
+            block_out, was_cold = self._call_block(block, niter)
+            out[i:i + chunk] = block_out[:chunk]
+            cold_blocks += was_cold
+            used.append(bucket)
+            i += chunk
+        with self._stats_lock:
+            for bucket in used:
+                self.bucket_calls[bucket] = \
+                    self.bucket_calls.get(bucket, 0) + 1
+            self.padded_samples += sum(used) - B
+            self.calls += 1
+            self.samples += B
+            traces_total = self.traces
+        info = {
+            "engine": "pallas-jit",
+            "buckets": used,
+            "padded": sum(used) - B,
+            "traced": cold_blocks,
+            "traces_total": traces_total,
+        }
+        return out, info
+
+    def warmup(self, M: int,
+               buckets: Optional[Sequence[int]] = None) -> Dict[str, object]:
+        """Pre-trace the ladder (or a subset) for scratchpad width ``M``
+        with a zero batch — ``n_iters`` is traced, so one warm trace per
+        bucket covers every trip count.  Requested sizes off the engine's
+        ladder snap UP to the bucket that will actually execute them
+        (``bucket_for``), so re-warming is always a no-op.  Returns this
+        engine's stats."""
+        want = sorted({self.bucket_for(b) for b in
+                       bucket_ladder(self.lanes, buckets or self.buckets)})
+        for bucket in want:
+            with self._stats_lock:
+                warm = (M, bucket) in self._warm
+            if not warm:
+                self.run(np.zeros((bucket, M), np.int32), 1)
+        return self.stats()
+
+    # -- observability --------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        with self._stats_lock:
+            traces = self.traces
+            bucket_calls = dict(sorted(self.bucket_calls.items()))
+            snap = {
+                "calls": self.calls,
+                "samples": self.samples,
+                "padded_samples": self.padded_samples,
+                "warm_shapes": sorted(self._warm),
+            }
+        calls = sum(bucket_calls.values())
+        hits = max(0, calls - traces)
+        return {
+            "traces": traces,
+            "bucket_calls": bucket_calls,
+            "hit_ratio": round(hits / calls, 4) if calls else None,
+            "buckets": self.buckets,
+            **snap,
+        }
+
+
+class CompiledKernelCache:
+    """The engine registry: one ``KernelEngine`` per
+    ``(lowered fingerprint, lanes, interpret)``, created on first use and
+    kept for the life of the process — the trace-once/run-many cache the
+    pallas backend, ``Executable.warmup`` and the execution service share.
+    """
+
+    def __init__(self, buckets: Optional[Sequence[int]] = None) -> None:
+        self.default_buckets = buckets
+        self._engines: Dict[Tuple[str, int, bool], KernelEngine] = {}
+        self._lock = threading.Lock()
+
+    def engine_for(self, linked: LinkedConfig, *, lanes: int = 128,
+                   interpret: bool = True,
+                   buckets: Optional[Sequence[int]] = None) -> KernelEngine:
+        key = (lowered_fingerprint(linked), lanes, interpret)
+        with self._lock:
+            eng = self._engines.get(key)
+            if eng is None:
+                eng = KernelEngine(linked, lanes=lanes, interpret=interpret,
+                                   buckets=buckets or self.default_buckets)
+                self._engines[key] = eng
+            return eng
+
+    def run(self, linked: LinkedConfig, flats: np.ndarray, n_iters: int, *,
+            lanes: int = 128, interpret: bool = True
+            ) -> Tuple[np.ndarray, Dict[str, object]]:
+        eng = self.engine_for(linked, lanes=lanes, interpret=interpret)
+        return eng.run(flats, n_iters)
+
+    def warmup(self, linked: LinkedConfig, M: int, *,
+               buckets: Optional[Sequence[int]] = None, lanes: int = 128,
+               interpret: bool = True) -> Dict[str, object]:
+        eng = self.engine_for(linked, lanes=lanes, interpret=interpret)
+        return eng.warmup(M, buckets)
+
+    def stats(self) -> Dict[str, object]:
+        """Aggregate over every engine: total traces / calls / samples,
+        hit ratio, plus the per-engine breakdown."""
+        with self._lock:
+            engines = dict(self._engines)
+        per = {f"{fp[:12]}/lanes={lanes}/{'interp' if it else 'tpu'}":
+               e.stats() for (fp, lanes, it), e in engines.items()}
+        traces = sum(e["traces"] for e in per.values())
+        bucket_calls = sum(sum(e["bucket_calls"].values())
+                           for e in per.values())
+        hits = max(0, bucket_calls - traces)
+        return {
+            "engines": len(per),
+            "traces": traces,
+            "calls": sum(e["calls"] for e in per.values()),
+            "samples": sum(e["samples"] for e in per.values()),
+            "padded_samples": sum(e["padded_samples"] for e in per.values()),
+            "hit_ratio": round(hits / bucket_calls, 4) if bucket_calls
+            else None,
+            "per_engine": per,
+        }
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._engines)
+
+
+_default: Optional[CompiledKernelCache] = None
+_default_lock = threading.Lock()
+
+
+def default_engine() -> CompiledKernelCache:
+    """The process-wide engine cache the pallas backend uses by default."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = CompiledKernelCache()
+        return _default
+
+
+def set_default_engine(cache: Optional[CompiledKernelCache]
+                       ) -> CompiledKernelCache:
+    """Swap the process-wide engine cache (e.g. a fresh one in tests);
+    returns the previous one so callers can restore it."""
+    global _default
+    prev = default_engine()
+    with _default_lock:
+        _default = cache
+    return prev

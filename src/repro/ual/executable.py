@@ -154,6 +154,24 @@ class Executable:
         info["throughput_sps"] = len(mems) / wall if wall > 0 else float("inf")
         return outs, info
 
+    def warmup(self, buckets: Optional[Sequence[int]] = None, *,
+               backend: Optional[str] = None) -> Dict[str, object]:
+        """Pre-trace the execution engine's batch-bucket ladder (pallas:
+        one jit trace per bucket; ``n_iters`` is traced, so those traces
+        cover every trip count).  Returns the engine's stats (trace
+        count, per-bucket calls, hit ratio) and records them in
+        ``last_info["engine_stats"]``.  A no-op ``{}`` on backends with
+        nothing to warm (sim/interp execute eagerly).
+        """
+        be = self._resolve(backend)
+        if not hasattr(be, "warmup"):
+            return {}
+        kw = self._backend_kwargs(be)
+        stats = be.warmup(self.program, self.map_result, buckets=buckets,
+                          **kw)
+        self.last_info = {"engine_stats": stats, "warmed": True}
+        return stats
+
     def run(self, arrays: Optional[Dict[str, np.ndarray]] = None,
             n_iters: Optional[int] = None, *,
             backend: Optional[str] = None,

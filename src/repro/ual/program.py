@@ -26,8 +26,9 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.dfg import (DFG, DataLayout, DFGBuilder, apply_layout,
-                            flat_memory, plan_layout, trace_into,
-                            unflatten_memory)
+                            flat_memory, flat_memory_batch, plan_layout,
+                            trace_into, unflatten_memory,
+                            unflatten_memory_batch)
 
 
 @dataclass(frozen=True)
@@ -84,6 +85,22 @@ class Program:
 
     def unflatten(self, flat: np.ndarray) -> Dict[str, np.ndarray]:
         return unflatten_memory(self.layout, flat, self.dfg.arrays)
+
+    def flatten_batch(self, mems: Sequence[Dict[str, np.ndarray]]
+                      ) -> np.ndarray:
+        """Batched ``flatten``: B dicts -> (B, total_words) in one
+        vectorized pass per array name (no per-sample Python loop) — what
+        the natively-batched backends feed the engines."""
+        mems = list(mems)
+        for m in mems:
+            self.check_arrays(m)
+        return flat_memory_batch(self.layout, mems)
+
+    def unflatten_batch(self, flats: np.ndarray
+                        ) -> "list[Dict[str, np.ndarray]]":
+        """Batched ``unflatten``: (B, total_words) -> B named-array dicts
+        (one contiguous copy per array name)."""
+        return unflatten_memory_batch(self.layout, flats, self.dfg.arrays)
 
     def random_inputs(self, rng: np.random.Generator,
                       lo: int = -50, hi: int = 50) -> Dict[str, np.ndarray]:

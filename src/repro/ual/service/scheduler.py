@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.ual.cache import MappingCache, default_cache
 from repro.ual.compiler import compile as ual_compile
+from repro.ual.engine import default_engine
 from repro.ual.executable import Executable
 from repro.ual.program import Program
 from repro.ual.service.coalescer import Coalescer
@@ -237,14 +238,26 @@ class Service:
         the mapping cache.  Workers racing on a cold key may each call
         ``compile``, but the cache's per-key compile lock collapses the
         expensive work to one mapping + one lowering (losers get a cache
-        hit), so only the cheap Executable wrapper is ever duplicated."""
+        hit), so only the cheap Executable wrapper is ever duplicated.
+
+        The first worker to install a tenant class's Executable also
+        warms its execution engine (``Executable.warmup``): the pallas
+        path pre-traces the batch-bucket ladder once, so the class's
+        variable-sized micro-batches never retrace on the serving path.
+        """
         key = req.key
         with self._lock:
             exe = self._exes.get(key)
         if exe is None:
             exe = ual_compile(req.program, req.target, cache=self._cache)
             with self._lock:
-                exe = self._exes.setdefault(key, exe)
+                installed = self._exes.setdefault(key, exe)
+            if installed is exe and exe.success:
+                try:
+                    exe.warmup()
+                except Exception:
+                    pass     # warming is an optimization, never a failure
+            exe = installed
         return exe
 
     def _run_batch(self, batch: List[Request]) -> None:
@@ -290,7 +303,9 @@ class Service:
     def stats(self) -> Dict[str, object]:
         """The serving numbers: p50/p99 latency (ms), achieved batch size
         (mean/max), samples/s, queue depth, rejects by reason, per-tenant
-        totals, warm executable count, and the mapping cache aggregate."""
+        totals, warm executable count, the mapping cache aggregate, and
+        the JIT execution engine aggregate (trace count / hit ratio —
+        the trace-once/run-many health of the pallas path)."""
         with self._lock:
             depth = self._pending
             n_exes = len(self._exes)
@@ -298,4 +313,5 @@ class Service:
         snap["executables"] = n_exes
         cache = self._cache if self._cache is not None else default_cache()
         snap["cache"] = cache.stats()
+        snap["engine"] = default_engine().stats()
         return snap

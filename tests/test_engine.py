@@ -1,0 +1,233 @@
+"""Persistent JIT execution engine: trace-once/run-many for the pallas path.
+
+The contract under test:
+
+  * batch-bucket padding is semantically invisible — batch sizes that
+    straddle bucket boundaries (1, 7, 9, 33, 129) are bit-exact against
+    the scalar reference engine and the unpadded DFG-interpreter oracle,
+  * the trace counter does not grow with repeated same-bucket calls
+    (monkeypatch-counted on the shared ``make_cgra_call`` constructor),
+    and stays O(#buckets) under mixed-size traffic,
+  * ``n_iters`` is traced: one warm trace serves every iteration count,
+  * ``Executable.warmup(buckets=...)`` pre-traces the ladder and records
+    engine stats in ``last_info``,
+  * external ``cgra_exec_op(..., linked=None)`` callers never lower the
+    same configuration twice (the fingerprint memo),
+  * ``Program.flatten_batch``/``unflatten_batch`` match the per-sample
+    scalar paths exactly (including missing / short arrays),
+  * ``Service.stats()`` surfaces the engine aggregate.
+"""
+import numpy as np
+import pytest
+
+from repro import ual
+from repro.core.dfg import interpret
+from repro.core.simulator import simulate_reference
+from repro.ual.engine import CompiledKernelCache, bucket_ladder
+
+N_ITERS = 6
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    """One small-scratchpad gemm compile shared by the module (smaller
+    bank_words keep the interpret-mode traces cheap)."""
+    program = ual.Program.from_kernel("gemm", bank_words=64)
+    target = ual.Target.from_name("hycube", rows=4, cols=4,
+                                  backend="pallas")
+    exe = ual.compile(program, target)
+    assert exe.success
+    return program, exe
+
+
+def _mems(program, B, seed=0):
+    rng = np.random.default_rng(seed)
+    return [program.random_inputs(rng) for _ in range(B)]
+
+
+# ---------------------------------------------------------------------------
+# bucket-padding correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [1, 7, 9, 33, 129])
+def test_bucket_straddling_batches_bitexact(compiled, B):
+    """Sizes straddling every bucket boundary of the (1, 8, 32, 128)
+    ladder — including B=129, which runs as a warm largest-bucket chunk
+    plus a bucket-1 tail — are bit-exact vs the unpadded oracle, and
+    (spot-checked first/last sample) vs the scalar reference engine."""
+    program, exe = compiled
+    mems = _mems(program, B, seed=B)
+    outs = exe.run_batch(mems, n_iters=N_ITERS)
+    assert exe.last_info["batch"] == B
+    for m, got in zip(mems, outs):
+        want = interpret(program.dfg, m, N_ITERS)
+        for name in program.outputs:
+            np.testing.assert_array_equal(got[name], want[name])
+    for b in (0, B - 1):
+        flat = program.flatten(mems[b])
+        ref, _ = simulate_reference(exe.map_result.config, flat, N_ITERS)
+        refd = program.unflatten(ref)
+        for name in program.outputs:
+            np.testing.assert_array_equal(outs[b][name], refd[name])
+
+
+def test_dynamic_n_iters_shares_one_trace(compiled):
+    """The trip count is a traced scalar: different n_iters on one bucket
+    reuse the same trace, and each still matches the oracle."""
+    program, exe = compiled
+    be = ual.get_backend("pallas")
+    eng = be.engine.engine_for(exe.lowered, lanes=be.lanes,
+                               interpret=be.interpret)
+    mems = _mems(program, 4, seed=42)
+    exe.run_batch(mems, n_iters=3)           # warm (or reuse) bucket 8
+    before = eng.traces
+    for n in (1, 5, 11):
+        outs = exe.run_batch(mems, n_iters=n)
+        for m, got in zip(mems, outs):
+            want = interpret(program.dfg, m, n)
+            for name in program.outputs:
+                np.testing.assert_array_equal(got[name], want[name])
+    assert eng.traces == before
+
+
+# ---------------------------------------------------------------------------
+# trace accounting
+# ---------------------------------------------------------------------------
+
+def test_trace_counter_static_across_same_bucket_calls(compiled,
+                                                       monkeypatch):
+    """Repeated calls landing in one bucket must not grow the trace
+    counter — proved by counting invocations of the ``pallas_call``
+    constructor (which runs exactly once per trace)."""
+    import repro.ual.engine as engine_mod
+
+    program, exe = compiled
+    builds = []
+    real = engine_mod.make_cgra_call
+    monkeypatch.setattr(engine_mod, "make_cgra_call",
+                        lambda *a, **k: builds.append(1) or real(*a, **k))
+
+    cache = CompiledKernelCache()            # fresh: no warm traces
+    flats = program.flatten_batch(_mems(program, 8, seed=7))
+    for B in (3, 8, 1, 5, 8, 2, 7, 4):       # buckets: {8, 1}
+        out, info = cache.run(exe.lowered, flats[:B], N_ITERS)
+        assert out.shape == (B, program.layout.total_words)
+    eng = cache.engine_for(exe.lowered)
+    assert len(builds) == 2                  # one per distinct bucket
+    assert eng.traces == 2
+    assert set(eng.bucket_calls) == {1, 8}
+    assert eng.stats()["hit_ratio"] == pytest.approx(6 / 8)
+
+
+def test_mixed_size_traffic_traces_bounded_by_ladder(compiled):
+    """O(#buckets) traces no matter how traffic is shaped: 40 mixed-size
+    calls on a fresh engine trace at most once per ladder bucket."""
+    program, exe = compiled
+    cache = CompiledKernelCache(buckets=(1, 4, 8))
+    flats = program.flatten_batch(_mems(program, 8, seed=11))
+    for i in range(40):
+        B = 1 + i % 8
+        cache.run(exe.lowered, flats[:B], N_ITERS)
+    eng = cache.engine_for(exe.lowered)
+    assert eng.buckets == (1, 4, 8)
+    assert eng.traces <= len(eng.buckets)
+    agg = cache.stats()
+    assert agg["engines"] == 1 and agg["traces"] == eng.traces
+
+
+def test_warmup_pre_traces_the_ladder(compiled):
+    program, exe = compiled
+    cache = CompiledKernelCache()
+    prev = ual.set_default_engine(cache)
+    try:
+        stats = exe.warmup(buckets=(1, 8))
+        assert stats["traces"] == 2
+        assert exe.last_info["engine_stats"]["traces"] == 2
+        exe.run_batch(_mems(program, 5, seed=3), n_iters=N_ITERS)
+        assert exe.last_info["traced"] == 0    # warm bucket, no retrace
+        assert exe.last_info["engine"] == "pallas-jit"
+    finally:
+        ual.set_default_engine(prev)
+
+
+def test_bucket_ladder_validation():
+    assert bucket_ladder(128) == (1, 8, 32, 128)
+    assert bucket_ladder(16, (32, 4, 4, 1)) == (1, 4)   # capped + deduped
+    with pytest.raises(ValueError):
+        bucket_ladder(8, (16, 32))
+
+
+# ---------------------------------------------------------------------------
+# no path lowers one config twice
+# ---------------------------------------------------------------------------
+
+def test_cgra_exec_op_memoizes_lowering(compiled, monkeypatch):
+    """External callers passing ``linked=None`` ride the per-process
+    fingerprint memo instead of silently re-lowering per call."""
+    import repro.kernels.cgra_exec.ops as ops
+
+    program, exe = compiled
+    ops._LINKED_MEMO.clear()
+    lowers = []
+    real = ops.link_config
+    monkeypatch.setattr(ops, "link_config",
+                        lambda cfg: lowers.append(1) or real(cfg))
+    flats = program.flatten_batch(_mems(program, 2, seed=9))
+    a = ops.cgra_exec_op(exe.map_result.config, flats, N_ITERS)
+    b = ops.cgra_exec_op(exe.map_result.config, flats, N_ITERS)
+    assert len(lowers) == 1
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# vectorized flatten/unflatten
+# ---------------------------------------------------------------------------
+
+def test_flatten_batch_matches_scalar_paths(compiled):
+    program, _ = compiled
+    mems = _mems(program, 5, seed=13)
+    flats = program.flatten_batch(mems)
+    want = np.stack([program.flatten(m) for m in mems])
+    np.testing.assert_array_equal(flats, want)
+    unflat = program.unflatten_batch(flats)
+    for b, m in enumerate(unflat):
+        scalar = program.unflatten(flats[b])
+        assert set(m) == set(scalar)
+        for name in m:
+            np.testing.assert_array_equal(m[name], scalar[name])
+
+
+def test_flatten_batch_ragged_and_missing_arrays(compiled):
+    """Missing arrays zero-fill and short arrays zero-pad, exactly like
+    the scalar path."""
+    program, _ = compiled
+    rng = np.random.default_rng(17)
+    full = program.random_inputs(rng)
+    name = program.inputs[0]
+    short = dict(full)
+    short[name] = full[name][: max(1, len(full[name]) // 2)]
+    missing = {k: v for k, v in full.items() if k != name}
+    mems = [full, short, missing]
+    flats = program.flatten_batch(mems)
+    want = np.stack([program.flatten(m) for m in mems])
+    np.testing.assert_array_equal(flats, want)
+
+
+def test_flatten_batch_rejects_unknown_arrays(compiled):
+    program, _ = compiled
+    with pytest.raises(KeyError, match="unknown array"):
+        program.flatten_batch([{"nope": np.zeros(4, np.int32)}])
+
+
+# ---------------------------------------------------------------------------
+# service surface
+# ---------------------------------------------------------------------------
+
+def test_service_stats_surface_engine_aggregate():
+    svc = ual.Service(start=False)
+    try:
+        snap = svc.stats()
+        assert "engine" in snap
+        assert {"engines", "traces", "hit_ratio"} <= set(snap["engine"])
+    finally:
+        svc.shutdown()
