@@ -4,7 +4,7 @@ from __future__ import annotations
 import json
 import time
 from pathlib import Path
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 

@@ -60,7 +60,10 @@ def smoke() -> int:
     2 strategies through ``compile_many(workers=2)``, then push 32
     single-sample requests through a ``max_batch=8`` ``ual.Service``.
 
-    Exit non-zero if any compile fails, any validation mismatches, the
+    Exit non-zero if any compile fails, any compiled config carries
+    verifier findings (``exe.check_report`` must be clean — recorded
+    per fabric under ``smoke.json["verifier"]``), any validation
+    mismatches, the
     warm compile misses the cache, the batched engine loses oracle parity
     or reports zero throughput, the JIT engine loses parity or retraces
     on a warm bucket, the sweep pays redundant mappings, or the service
@@ -72,6 +75,7 @@ def smoke() -> int:
     from repro import ual
     failures = []
     rows = []
+    verifier_json = []
     with tempfile.TemporaryDirectory() as d:
         cache = ual.MappingCache(disk_dir=d)
         for fab_name, kwargs in SMOKE_TARGETS:
@@ -87,6 +91,19 @@ def smoke() -> int:
             warm = ual.compile(program, target, cache=cache)
             t_warm = time.perf_counter() - t0
             fail = None if exe.success else "compile failed"
+            # every config the smoke compiles must verify CLEAN — a
+            # warning here is a mapper/lowering regression, not noise
+            # (spatial/mapping-free targets carry no report: recorded
+            # as skipped, not failed)
+            rep = exe.check_report
+            if rep is not None:
+                verifier_json.append(rep.to_json())
+                if fail is None and rep.diagnostics:
+                    fail = f"verifier findings: {rep.summary()}"
+            else:
+                verifier_json.append(
+                    {"name": f"{SMOKE_KERNEL} @ {target.fabric.name}",
+                     "skipped": "no machine configuration"})
             if fail is None and spatial:
                 # spatial: no config to validate, but the analytic model and
                 # the interp execution path must still behave
@@ -106,9 +123,12 @@ def smoke() -> int:
             rows.append([f"{SMOKE_KERNEL}@{target.fabric.name}",
                          exe.II if exe.success else -1,
                          f"{t_cold:.2f}s", f"{t_warm * 1e3:.1f}ms",
+                         "clean" if rep is not None and not rep.diagnostics
+                         else ("-" if rep is None else rep.summary()),
                          "ok" if ok else "FAIL"])
     print("== smoke: one kernel per fabric, cache-cold then cache-warm ==")
-    print(fmt_table(["kernel@fabric", "II", "cold", "warm", "check"], rows))
+    print(fmt_table(["kernel@fabric", "II", "cold", "warm", "verify",
+                     "check"], rows))
     print(f"cache: {cache.stats}")
     # the aggregate view (MappingCache.stats()): ratios + disk entries.
     # Rendered after the tempdir closes, so disk_entries reads 0 here —
@@ -270,7 +290,8 @@ def smoke() -> int:
         finally:
             ual.set_default_engine(prev_engine)
 
-    save("smoke", {"fabrics": rows, "sweep": sweep_json,
+    save("smoke", {"fabrics": rows, "verifier": verifier_json,
+                   "sweep": sweep_json,
                    "batched_sim": batched_json, "pallas_engine": engine_json,
                    "service": service_json, "failures": failures})
     for f in failures:

@@ -38,8 +38,9 @@ def qk_score():
     acc2 = b.op("ADD", acc, s)
     b.bind(acc, acc2)
     b.store("s", 0, acc2)
-    rng = lambda r: {"q": r.integers(-64, 64, K).astype(np.int32),
-                     "k": r.integers(-64, 64, K).astype(np.int32)}
+    def rng(r):
+        return {"q": r.integers(-64, 64, K).astype(np.int32),
+                "k": r.integers(-64, 64, K).astype(np.int32)}
     return b.build(), rng, N_ITERS
 
 
@@ -57,9 +58,10 @@ def rwkv_decay():
     s2 = b.op("ADD", b.op("SHR", b.op("MUL", s, b.load("w", i)), 8), kv)
     b.bind(s, s2)
     b.store("o", i, s2)
-    rng = lambda r: {"k": r.integers(-16, 16, N).astype(np.int32),
-                     "v": r.integers(-16, 16, N).astype(np.int32),
-                     "w": r.integers(0, 256, N).astype(np.int32)}
+    def rng(r):
+        return {"k": r.integers(-16, 16, N).astype(np.int32),
+                "v": r.integers(-16, 16, N).astype(np.int32),
+                "w": r.integers(0, 256, N).astype(np.int32)}
     return b.build(), rng, N_ITERS
 
 
@@ -85,7 +87,8 @@ def router_argmax():
     b.bind(beste, ne)
     b.store("best", 0, nb)
     b.store("beste", 0, ne)
-    rng = lambda r: {"logit": r.integers(-512, 512, N).astype(np.int32)}
+    def rng(r):
+        return {"logit": r.integers(-512, 512, N).astype(np.int32)}
     return b.build(), rng, N_ITERS
 
 

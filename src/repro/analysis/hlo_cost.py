@@ -17,7 +17,6 @@ here is PER DEVICE: roofline terms divide by single-chip peaks directly.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

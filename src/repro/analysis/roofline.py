@@ -14,11 +14,9 @@ all-to-all / collective-permute.  MODEL_FLOPS = 6*N*D (dense) or
 """
 from __future__ import annotations
 
-import json
-import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 # -- TPU v5e hardware constants ------------------------------------------------
 PEAK_FLOPS_BF16 = 197e12          # per chip

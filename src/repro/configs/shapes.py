@@ -8,7 +8,7 @@ Encoder-only archs (hubert) have no decode step, so decode shapes skip.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclass(frozen=True)

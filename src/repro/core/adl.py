@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Opcode classes
@@ -158,7 +158,7 @@ class Fabric:
             "name": self.name, "rows": self.rows, "cols": self.cols,
             "pes": [{"ops": sorted(a.ops), "is_mem": a.is_mem, "n_regs": a.n_regs}
                     for a in self.pes],
-            "links": [list(l) for l in self.links],
+            "links": [list(ab) for ab in self.links],
             "max_hops": self.max_hops, "multicast": self.multicast,
             "route_through_fu": self.route_through_fu, "temporal": self.temporal,
             "datapath_bits": self.datapath_bits,
@@ -175,7 +175,7 @@ class Fabric:
             name=d["name"], rows=d["rows"], cols=d["cols"],
             pes=[PEAttr(frozenset(p["ops"]), p["is_mem"], p["n_regs"])
                  for p in d["pes"]],
-            links=[tuple(l) for l in d["links"]],
+            links=[tuple(ab) for ab in d["links"]],
             max_hops=d["max_hops"], multicast=d["multicast"],
             route_through_fu=d["route_through_fu"], temporal=d["temporal"],
             datapath_bits=d["datapath_bits"],

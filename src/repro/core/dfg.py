@@ -26,7 +26,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.adl import ALU_OPS, MEM_OPS
+from repro.core.adl import MEM_OPS
 
 INT = np.int32
 _MASK = np.uint32(0xFFFFFFFF)

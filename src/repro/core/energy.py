@@ -21,10 +21,8 @@ machine configuration, including PACE's dynamic clock gating of idle PEs
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
-import numpy as np
 
 # -- calibration constants (fit to the paper's measurements) ------------------
 N_PES = 64

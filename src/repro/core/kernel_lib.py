@@ -77,7 +77,8 @@ def fft() -> KernelEntry:
     b.store("oi0", i, b.op("ADD", ai, ti))
     b.store("or1", i, b.op("SUB", ar, tr))
     b.store("oi1", i, b.op("SUB", ai, ti))
-    mk = lambda r: {nm: _rand(r, N) for nm in ("ar", "ai", "br", "bi", "wr", "wi")}
+    def mk(r):
+        return {nm: _rand(r, N) for nm in ("ar", "ai", "br", "bi", "wr", "wi")}
     return b.build(), mk, N
 
 
@@ -164,9 +165,9 @@ def disparity() -> KernelEntry:
     diffs = []
     for w in range(W):
         idx = b.op("ADD", d, const=w)
-        l = b.load("left", w)
+        lv = b.load("left", w)
         rr = b.load("right", idx)
-        diffs.append(b.op("ABS", b.op("SUB", l, rr)))
+        diffs.append(b.op("ABS", b.op("SUB", lv, rr)))
     while len(diffs) > 1:
         diffs = [b.op("ADD", diffs[2 * j], diffs[2 * j + 1])
                  for j in range(len(diffs) // 2)]
@@ -178,7 +179,9 @@ def disparity() -> KernelEntry:
     b.bind(bestd, nbestd)
     b.store("best", 0, nbest)
     b.store("bestd", 0, nbestd)
-    mk = lambda r: {"left": _rand(r, N + W, 0, 256), "right": _rand(r, N + W, 0, 256)}
+    def mk(r):
+        return {"left": _rand(r, N + W, 0, 256),
+                "right": _rand(r, N + W, 0, 256)}
     return b.build(), mk, N
 
 
@@ -235,8 +238,9 @@ def nw() -> KernelEntry:
     score = b.op("MAX", b.op("MAX", c_diag, c_up), c_left)
     b.bind(left, score)
     b.store("row", j, score)
-    mk = lambda r: {"above": _rand(r, N + 1, -8, 8), "seqa": _rand(r, N, 0, 4),
-                    "seqb": _rand(r, N, 0, 4)}
+    def mk(r):
+        return {"above": _rand(r, N + 1, -8, 8), "seqa": _rand(r, N, 0, 4),
+                "seqb": _rand(r, N, 0, 4)}
     return b.build(), mk, N
 
 

@@ -15,8 +15,7 @@ mapping quality.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -34,15 +34,15 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.machine import (MachineConfig, SRC_CONST, SRC_IN, SRC_NONE,
-                                SRC_REG, SRC_SELF, XB_IN, XB_NONE, XB_O,
-                                XB_REG)
+from repro.core.machine import (MachineConfig, SRC_CONST, SRC_NONE, SRC_REG,
+                                SRC_SELF, XB_IN, XB_NONE, XB_O, XB_REG)
 
 K_NONE, K_O, K_R, K_CONST, K_RESULT = 0, 1, 2, 3, 4
 
 #: bump when the dense-table layout changes — folded into the on-disk
 #: cache entry name so stale lowered artifacts are never deserialized
-LOWERING_VERSION = 1
+#: (v2: added the ``unresolved_inputs`` lowering-health counter)
+LOWERING_VERSION = 2
 
 
 @dataclass
@@ -57,7 +57,22 @@ class LinkedConfig:
     scalar: np.ndarray    # (S, P, 4)    [opcode, const, use_const, t0]
     ops: np.ndarray       # (S, P, 3, 5) [kind, pe, reg, dist, init]
     regw: np.ndarray      # (S, P, R, 3) [kind, pe, reg]
-    n_mem_ports: int = 0  # 0 = unknown/unbounded (port check disabled)
+    #: the fabric's shared-scratchpad port budget, threaded through
+    #: unconditionally by ``link_config``.  0 means *unknown/unbounded*:
+    #: the engines' runtime oversubscription guard (``limit and
+    #: ports_used > limit``) and the static verifier's UAL001 check are
+    #: both disabled — port pressure is still *recorded* in ``SimStats``.
+    #: Every registered fabric sets a real limit; 0 only appears on
+    #: hand-built tables that never saw a fabric.
+    n_mem_ports: int = 0
+    #: how many wire selects (``SRC_IN`` operands / ``XB_IN`` register
+    #: writes) failed to resolve to a driver at lowering time and were
+    #: collapsed to a silent ``K_NONE`` row.  0 for every config a
+    #: correct mapper emits; the static verifier
+    #: (``repro.analysis.verifier``, code UAL004) flags any nonzero
+    #: count without re-deriving routing — this is the root exposure of
+    #: the silent-``K_NONE`` lowering hazard
+    unresolved_inputs: int = 0
 
     def cm_bytes(self) -> int:
         return self.scalar.nbytes + self.ops.nbytes + self.regw.nbytes
@@ -162,6 +177,7 @@ def link_config(cfg: MachineConfig) -> LinkedConfig:
     scalar[:, :, 2] = cfg.use_const
     scalar[:, :, 3] = cfg.t0
 
+    unresolved = 0
     for s in range(S):
         drv = _resolve_drivers(cfg, s)
         for p in range(P):
@@ -177,6 +193,12 @@ def link_config(cfg: MachineConfig) -> LinkedConfig:
                     row = (K_CONST, 0, 0, dist, init)
                 else:                                  # SRC_IN: wire -> driver
                     dk, dp, dr = drv[idx]
+                    if dk == K_NONE:
+                        # the driver fixed point never resolved: the
+                        # operand collapses to an absent source.  Count
+                        # it so the verifier / fingerprint consumers can
+                        # flag the hazard without re-deriving routing
+                        unresolved += 1
                     row = (int(dk), int(dp), int(dr), dist, init)
                 ops[s, p, k] = row
             for r in range(R):
@@ -187,8 +209,11 @@ def link_config(cfg: MachineConfig) -> LinkedConfig:
                     regw[s, p, r] = (K_RESULT, p, 0)
                 else:                                  # XB_IN via wire
                     dk, dp, dr = drv[idx]
+                    if dk == K_NONE:
+                        unresolved += 1
                     regw[s, p, r] = (int(dk), int(dp), int(dr))
     return LinkedConfig(II=cfg.II, n_pes=P, n_regs=R,
                         mem_pes=tuple(cfg.fabric.mem_pes),
                         scalar=scalar, ops=ops, regw=regw,
-                        n_mem_ports=cfg.fabric.n_mem_ports)
+                        n_mem_ports=cfg.fabric.n_mem_ports,
+                        unresolved_inputs=unresolved)

@@ -15,8 +15,8 @@ every instruction carries its first firing cycle ``t0``; a PE is clock-gated
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -23,7 +23,7 @@ import math
 import random
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.adl import Fabric, MEM_OPS
 from repro.core.dfg import DFG

@@ -17,8 +17,8 @@ Search-node encodings (absolute time ``t``; capacities keyed mod II):
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.adl import Fabric
 

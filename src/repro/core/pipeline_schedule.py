@@ -16,8 +16,7 @@ under the schedule and compares against sequential execution.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 FWD, BWD = "F", "B"

@@ -87,7 +87,7 @@ def simulate_reference(cfg: MachineConfig, mem: np.ndarray, n_iters: int,
     n_regs = cfg.regw.shape[2]
     mem = mem.astype(I32).copy()
 
-    O = np.zeros(P, I32)                     # output latches
+    out_latch = np.zeros(P, I32)             # PE output latches
     R = np.zeros((P, n_regs), I32)           # input registers
     t_end = int(cfg.t0.max()) + n_iters * II + II + 2
     fired = idle = mem_acc = max_ports = 0
@@ -106,7 +106,7 @@ def simulate_reference(cfg: MachineConfig, mem: np.ndarray, n_iters: int,
                     if kind == XB_NONE or driven[li]:
                         continue
                     if kind == XB_O:
-                        wires[li] = O[p]
+                        wires[li] = out_latch[p]
                         driven[li] = True
                         changed = True
                     elif kind == XB_REG:
@@ -148,7 +148,7 @@ def simulate_reference(cfg: MachineConfig, mem: np.ndarray, n_iters: int,
                 elif kind == SRC_IN:
                     ops.append(wires[idx])
                 elif kind == SRC_SELF:
-                    ops.append(O[p])
+                    ops.append(out_latch[p])
                 elif kind == SRC_CONST:
                     ops.append(I32(cfg.const[s, p]))
             const = int(cfg.const[s, p])
@@ -191,7 +191,7 @@ def simulate_reference(cfg: MachineConfig, mem: np.ndarray, n_iters: int,
                 elif kind == XB_O and p in results:
                     R[p, r] = results[p]
         for p, v in results.items():
-            O[p] = v
+            out_latch[p] = v
 
     stats = SimStats(t_end, fired, idle, mem_acc, max_ports,
                      worst_port_cycle=worst_cycle,
@@ -423,6 +423,14 @@ class BatchedSimulator:
                 if ports_used > max_ports:
                     max_ports = ports_used
                     worst_cycle = t
+                # guard semantics (explicit contract, tested in
+                # tests/test_verifier.py): ``linked.n_mem_ports == 0``
+                # means *unknown/unbounded* — the oversubscription check
+                # is disabled entirely (`limit and ...` short-circuits),
+                # while pressure is still recorded in SimStats above.
+                # ``link_config`` threads the fabric's real limit through
+                # unconditionally, so 0 only appears on hand-built
+                # tables; the static verifier flags it as UAL011
                 if check_ports and limit and ports_used > limit:
                     raise RuntimeError(
                         f"memory port oversubscription at cycle {t}: "

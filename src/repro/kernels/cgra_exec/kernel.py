@@ -58,7 +58,8 @@ def _sel_rows(idx, table):
 def _alu(opc, v0, v1, v2, const, use_const_mask):
     """Vectorized ALU: all opcodes computed, selected by ``opc`` (P, 1)."""
     sh5 = jnp.bitwise_and(v1, 31)
-    cmp = lambda c: c.astype(I32)
+    def cmp(c):
+        return c.astype(I32)
     cases = {
         "ADD": v0 + v1, "SUB": v0 - v1, "MUL": v0 * v1,
         "SHL": jax.lax.shift_left(v0, sh5),
@@ -92,7 +93,7 @@ def _cgra_kernel(niter_ref, scalar_ref, ops_ref, regw_ref, mem_in_ref,
     M, B = mem0.shape
 
     def cycle(t, carry):
-        O, Rf, mem = carry              # (P,B), (P*R,B), (M,B)
+        out_latch, Rf, mem = carry      # (P,B), (P*R,B), (M,B)
         s = t % II
         sc = jax.lax.dynamic_index_in_dim(scalar, s, 0, keepdims=False)
         op = jax.lax.dynamic_index_in_dim(optab, s, 0, keepdims=False)
@@ -106,7 +107,8 @@ def _cgra_kernel(niter_ref, scalar_ref, ops_ref, regw_ref, mem_in_ref,
         def operand(k):
             kind, pe, reg = op[:, k, 0], op[:, k, 1], op[:, k, 2]
             dist, init = op[:, k, 3], op[:, k, 4]
-            v = jnp.where((kind == K_O)[:, None], _sel_rows(pe, O), 0)
+            v = jnp.where((kind == K_O)[:, None],
+                          _sel_rows(pe, out_latch), 0)
             v = jnp.where((kind == K_R)[:, None],
                           _sel_rows(pe * R + reg, Rf), v)
             v = jnp.where((kind == K_CONST)[:, None], cvec, v)
@@ -152,7 +154,7 @@ def _cgra_kernel(niter_ref, scalar_ref, ops_ref, regw_ref, mem_in_ref,
         rwk = rw[:, :, 0].reshape(P * R)
         rwp = rw[:, :, 1].reshape(P * R)
         rwr = rw[:, :, 2].reshape(P * R)
-        from_o = _sel_rows(rwp, O)
+        from_o = _sel_rows(rwp, out_latch)
         from_r = _sel_rows(rwp * R + rwr, Rf)
         from_res = _sel_rows(rwp, result)
         fired_src = _sel_rows(rwp, fired.astype(I32)[:, None]
@@ -161,7 +163,7 @@ def _cgra_kernel(niter_ref, scalar_ref, ops_ref, regw_ref, mem_in_ref,
         Rf_new = jnp.where((rwk == K_R)[:, None], from_r, Rf_new)
         Rf_new = jnp.where(((rwk == K_RESULT)[:, None]) & (fired_src != 0),
                            from_res, Rf_new)
-        O_new = jnp.where(fired[:, None], result, O)
+        O_new = jnp.where(fired[:, None], result, out_latch)
         return O_new, Rf_new, mem
 
     O0 = jnp.zeros((P, B), I32)

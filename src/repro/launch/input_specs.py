@@ -5,7 +5,7 @@ optimizer state, batches and decode caches for every (arch x shape) cell.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ import numpy as np
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.launch.mesh import make_host_mesh
 from repro.models.common import init_params
-from repro.models.lm import decode_step, forward, init_cache
+from repro.models.lm import decode_step, init_cache
 
 
 def greedy_generate(params, cfg, prompts, max_new: int, max_len: int):

@@ -26,7 +26,6 @@ from repro.configs import ARCHS, get_config, smoke_config
 from repro.data.pipeline import DataConfig, host_batch
 from repro.launch.mesh import make_host_mesh, make_mesh
 from repro.runtime.fault_tolerance import FaultConfig, Supervisor
-from repro.checkpoint import checkpoint as ckpt
 from repro.models.common import init_params
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import make_sharded_train_step, make_train_state

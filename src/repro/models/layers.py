@@ -10,8 +10,7 @@ TPU hot path; this jnp version is its oracle and the dry-run lowering).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -130,7 +129,8 @@ def blockwise_attention(q, k, v, *, causal: bool = True, window=1 << 30,
 def attention_block(x, p, layer_sel, cfg, positions, *, causal=True,
                     window=1 << 30, prefix_len=None, block_kv: int = 512):
     """Full attention sub-block: projections + RoPE (+qk-norm) + blockwise."""
-    sel = (lambda w: w if layer_sel is None else w[layer_sel])
+    def sel(w):
+        return w if layer_sel is None else w[layer_sel]
     B, S, d = x.shape
     H, KV, D = cfg.n_heads, cfg.kv_heads, cfg.hd
     q = (x @ sel(p["wq"])).reshape(B, S, H, D)

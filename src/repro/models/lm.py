@@ -8,17 +8,15 @@ are sharding-agnostic and runnable on one CPU device for smoke tests).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.common import ModelConfig
-from repro.models.layers import (attention_block, blockwise_attention,
-                                 decode_attention, mlp, rms_norm, rope)
-from repro.models.mamba2 import _split_proj, mamba2_layer
+from repro.models.layers import (attention_block, decode_attention, mlp,
+                                 rms_norm, rope)
+from repro.models.mamba2 import mamba2_layer
 from repro.models.moe import moe_block
 from repro.models.rwkv6 import rwkv6_decode_step, rwkv6_layer
 from repro.sharding.ctx import constrain

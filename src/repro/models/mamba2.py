@@ -11,7 +11,6 @@ with a_t = exp(-dt_t * exp(A_log_h)).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

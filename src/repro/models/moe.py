@@ -13,7 +13,7 @@ scatter becomes the EP all-to-all).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ with w_t = exp(-exp(ww x_t + b)) in (0, 1) data-dependent.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,8 @@ LOG_W_MIN = -8.0     # clamp per-token log-decay for numerical safety
 
 def _proj_rkvwg(x, x_prev, p):
     """Token-shift mixes + five projections.  x: (B, S, d)."""
-    sel = lambda w: w
+    def sel(w):
+        return w
     mix = jax.nn.sigmoid(sel(p["mix"]))                   # (5, d)
     xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
     def mixed(i):

@@ -7,15 +7,13 @@ divisible, else sequence-sharded flash-decode).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig
-from repro.models.lm import decode_step, forward, init_cache
+from repro.models.lm import decode_step, forward
 from repro.sharding.ctx import activation_sharding, make_rules
 from repro.sharding.specs import (batch_specs, cache_specs, dp_axes,
                                   param_specs, sanitize_specs, to_shardings)

@@ -19,7 +19,7 @@ Nothing here hard-codes axis sizes; scaling to 1000+ nodes only grows the
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -8,8 +8,7 @@ memory from 8 to ~4 bytes/param and is the default for the 480B config.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

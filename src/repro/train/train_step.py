@@ -9,18 +9,16 @@ int8 gradient compression sits on the DP all-reduce path.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.models.common import ModelConfig, init_params
 from repro.models.lm import lm_loss
 from repro.sharding.ctx import activation_sharding, make_rules
-from repro.sharding.specs import (activation_spec, batch_specs, dp_axes,
-                                  param_specs, sanitize_specs, to_shardings)
+from repro.sharding.specs import (batch_specs, dp_axes, param_specs,
+                                  sanitize_specs, to_shardings)
 from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
                                    opt_state_specs)
 

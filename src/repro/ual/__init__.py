@@ -23,11 +23,17 @@ Vocabulary:
   * ``Program``  — DFG + scratchpad layout + named I/O spec, content-hashed,
   * ``Target``   — fabric + mapper strategy + backend name,
   * ``compile``  — the staged pass pipeline (layout -> MII bounds ->
-    mapping strategy -> lowering -> validation binding; per-pass timings
-    in ``CompileInfo.passes``), memoized across processes by
-    ``(program.digest, target.digest)`` — both the mapping and the
-    lowered dense tables (``LinkedConfig``), so warm compiles neither
-    re-map nor re-lower,
+    mapping strategy -> lowering -> verify -> validation binding;
+    per-pass timings in ``CompileInfo.passes``), memoized across
+    processes by ``(program.digest, target.digest)`` — both the mapping
+    and the lowered dense tables (``LinkedConfig``), so warm compiles
+    neither re-map nor re-lower,
+  * ``verify``/``CheckReport`` — the compile-time config verifier
+    (``repro.analysis.verifier``): static diagnostics (``UAL001``...)
+    over the lowered tables; error findings abort ``compile()`` with a
+    rendered ``VerifyError``, warnings ride on
+    ``Executable.check_report``; ``python -m repro.ual.check`` is the
+    CLI (code reference: ``docs/diagnostics.md``),
   * ``Executable`` — ``run``/``run_batch``/``validate`` on any backend;
     ``run_batch`` is natively batched on ``sim`` and ``pallas`` and
     reports throughput (``last_info["throughput_sps"]``),
@@ -55,6 +61,8 @@ raise without ``overwrite=True``): ``register_backend``
 (adaptive/sa built-in); enumerate with ``list_backends()`` /
 ``list_fabrics()`` / ``list_strategies()``.
 """
+from repro.analysis.verifier import (CheckReport, Diagnostic, VerifyError,
+                                     verify)
 from repro.core.lowering import LinkedConfig, link_config
 from repro.core.mapper import (MapperStrategy, list_strategies,
                                register_strategy)
@@ -71,21 +79,22 @@ from repro.ual.executable import CompileInfo, Executable, PassRecord
 from repro.ual.explore import (DesignPoint, ExploreReport, compile_many,
                                explore)
 from repro.ual.pipeline import (CompileContext, CompilePass, Pipeline,
-                                default_pipeline)
+                                VerifyPass, default_pipeline)
 from repro.ual.program import Program
 from repro.ual.service import Response, Service, ServiceRejected
 from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 
 __all__ = [
-    "Backend", "CACHE_VERSION", "CacheStats", "CompileContext",
-    "CompileInfo", "CompiledKernelCache", "CompilePass", "DesignPoint",
-    "Executable", "ExploreReport", "FABRICS", "KernelEngine",
-    "LinkedConfig", "MapperStrategy", "MappingCache", "PassRecord",
-    "Pipeline", "Program", "Response", "Service", "ServiceRejected",
-    "Target",
+    "Backend", "CACHE_VERSION", "CacheStats", "CheckReport",
+    "CompileContext", "CompileInfo", "CompiledKernelCache", "CompilePass",
+    "DesignPoint", "Diagnostic", "Executable", "ExploreReport", "FABRICS",
+    "KernelEngine", "LinkedConfig", "MapperStrategy", "MappingCache",
+    "PassRecord", "Pipeline", "Program", "Response", "Service",
+    "ServiceRejected", "Target", "VerifyError", "VerifyPass",
     "bucket_ladder", "compile", "compile_many", "default_cache",
     "default_cache_dir", "default_engine", "default_pipeline", "explore",
     "get_backend", "link_config", "list_backends", "list_fabrics",
     "list_strategies", "register_backend", "register_fabric",
     "register_strategy", "set_default_cache", "set_default_engine",
+    "verify",
 ]

@@ -19,6 +19,11 @@ binding), so:
     (``core.lowering.LinkedConfig``) that the ``sim`` and ``pallas``
     engines both execute — memoized next to the ``MapResult`` under the
     same key, so a warm compile re-lowers nothing,
+  * every lowered configuration is statically verified
+    (``repro.analysis.verifier``: port oversubscription, unresolved
+    wire chains, table integrity, ...) — error findings abort the
+    compile with a rendered ``VerifyError``; warnings ride along on
+    ``Executable.check_report``,
   * every pass reports name / wall-time / stats into
     ``CompileInfo.passes`` for tooling and the DSE front-end.
 
@@ -65,4 +70,4 @@ def compile(program: Program, target: Target, *,
                        passes=list(ctx.records))
     return Executable(program, target, ctx.result, info,
                       spatial_subgraphs=ctx.spatial_subgraphs,
-                      lowered=ctx.lowered)
+                      lowered=ctx.lowered, check_report=ctx.check_report)

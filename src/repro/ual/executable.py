@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.verifier import CheckReport
 from repro.core.lowering import LinkedConfig
 from repro.core.mapper import MapResult
 from repro.ual.backends import Backend, get_backend
@@ -70,6 +71,12 @@ class Executable:
     compile_info: CompileInfo = field(default_factory=CompileInfo)
     spatial_subgraphs: int = 0               # spatial fabrics: #subgraphs
     lowered: Optional[LinkedConfig] = None   # shared lowered artifact
+    #: the compile-time verifier's findings (``repro.analysis.verifier``)
+    #: — present whenever a machine configuration was verified.  Errors
+    #: abort ``compile()`` (``VerifyError``), so a constructed Executable
+    #: carries at most warnings/infos here; None for mapping-free
+    #: backends, spatial fabrics and custom pipelines without the pass
+    check_report: Optional[CheckReport] = None
     #: convenience copy of the most recent run/run_batch info — NOT a
     #: synchronization point; concurrent callers each get their own info
     #: internally and this attribute only reflects whichever call wrote last

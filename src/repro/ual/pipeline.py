@@ -15,6 +15,13 @@ instrumented passes, each timed with ``time.perf_counter`` and reporting a
     linked tables (``core.lowering.LinkedConfig``) every execution
     engine consumes; memoized in the cache next to the ``MapResult``
     under the same digest key, so a warm compile re-lowers nothing,
+  * ``verify``   — the static diagnostics pass
+    (``repro.analysis.verifier``): port oversubscription, write-write
+    races, unresolved wire chains, use-before-def / dead code, table
+    integrity — decidable over the modulo schedule without running a
+    cycle.  Error-severity findings fail the compile with a rendered
+    ``VerifyError``; warnings/infos ride along in the pass record and
+    on ``Executable.check_report``,
   * ``binding``  — bind the execution backend and record whether the
     result is runnable / validatable.
 
@@ -28,6 +35,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis.verifier import CheckReport, VerifyError, verify
 from repro.core.lowering import (LinkedConfig, config_fingerprint,
                                  link_config)
 from repro.core.mapper import (MapResult, map_dfg, rec_mii, res_mii,
@@ -64,6 +72,7 @@ class CompileContext:
     #: whole mapping+lowering, paying exactly one of each), released by
     #: ``Pipeline.run``'s finally
     key_lock: Optional[object] = None
+    check_report: Optional[CheckReport] = None  # the verify pass's findings
     records: List[PassRecord] = field(default_factory=list)
 
 
@@ -240,6 +249,41 @@ class LoweringPass(CompilePass):
         return {"cache": "miss", "cm_bytes": lowered.cm_bytes()}
 
 
+class VerifyPass(CompilePass):
+    """Static diagnostics over the mapped config + lowered artifact.
+
+    Runs the compile-time verifier (``repro.analysis.verifier``) on
+    every compile that produced a machine configuration — including
+    cache-warm ones, so corrupted cached tables are caught too.  Reuses
+    the lowering pass's artifact (zero re-lowering; the exactly-one-
+    lowering contract holds).  In ``strict`` mode (the default
+    pipeline), error-severity findings abort the compile by raising
+    ``VerifyError`` with the rendered report; warnings and infos are
+    recorded in the pass stats and surfaced on
+    ``Executable.check_report``.  ``strict=False`` (the
+    ``repro.ual.check`` CLI) always collects the full report.
+    """
+
+    name = "verify"
+
+    def __init__(self, strict: bool = True):
+        self.strict = strict
+
+    def run(self, ctx):
+        r = ctx.result
+        if r is None or not r.success or r.config is None:
+            return {"skipped": "no machine configuration"}
+        report = verify(cfg=r.config, linked=ctx.lowered,
+                        program=ctx.program,
+                        name=f"{ctx.program.name} @ "
+                             f"{ctx.target.fabric.name}")
+        ctx.check_report = report
+        if self.strict and not report.ok:
+            raise VerifyError(report)
+        return {**report.counts(), "ok": report.ok,
+                "codes": sorted(report.codes())}
+
+
 class BindingPass(CompilePass):
     """Validation binding: tie the backend to the mapping artifacts.
 
@@ -284,6 +328,11 @@ class Pipeline:
         return ctx
 
 
-def default_pipeline() -> Pipeline:
+def default_pipeline(strict_verify: bool = True) -> Pipeline:
+    """The standard pass list.  ``strict_verify=False`` keeps the verify
+    pass but collects error findings into ``Executable.check_report``
+    instead of raising — what the ``repro.ual.check`` CLI uses to render
+    complete reports for broken configs."""
     return Pipeline([LayoutPass(), MIIBoundsPass(), MappingPass(),
-                     LoweringPass(), BindingPass()])
+                     LoweringPass(), VerifyPass(strict=strict_verify),
+                     BindingPass()])

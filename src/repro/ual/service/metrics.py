@@ -18,7 +18,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -39,6 +39,8 @@ class ServiceRejected(RuntimeError):
     Raised out of ``Response.result()`` for admission-control verdicts:
     ``queue-full`` (backpressure), ``deadline-exceeded`` (the request
     aged out before execution), ``compile-failed`` (its key cannot map),
+    ``verifier-error`` (its key maps but the lowered config fails static
+    verification — the detail carries the ``CheckReport`` summary),
     ``shutdown`` (the service stopped with the request still queued).
     """
 

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.verifier import VerifyError
 from repro.ual.cache import MappingCache, default_cache
 from repro.ual.compiler import compile as ual_compile
 from repro.ual.engine import default_engine
@@ -275,7 +276,16 @@ class Service:
         if not live:
             return
         try:
-            exe = self._executable(live[0])
+            try:
+                exe = self._executable(live[0])
+            except VerifyError as exc:
+                # a config that fails static verification is a tenant
+                # problem, not a worker crash: reject with the report's
+                # one-line summary, keep the worker alive
+                for req in live:
+                    self._finish_rejected(req, "verifier-error",
+                                          exc.report.summary())
+                return
             if not exe.success:
                 for req in live:
                     self._finish_rejected(

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, FAMILIES, smoke_config
-from repro.models.common import init_params, param_bytes
+from repro.models.common import init_params
 from repro.models.lm import decode_step, forward, init_cache, lm_loss
 
 ARCH_NAMES = sorted(ARCHS)

@@ -2,9 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core.dfg import (DFG, DFGBuilder, apply_layout, flat_memory,
-                            interpret, plan_layout, trace_into,
-                            unflatten_memory)
+from repro.core.dfg import (DFGBuilder, apply_layout, flat_memory, interpret,
+                            plan_layout, trace_into, unflatten_memory)
 from repro.core.kernel_lib import KERNELS
 
 

@@ -4,7 +4,6 @@ Kernel-library mappings go through ``ual.compile`` so they are memoized in
 the session-wide cache (see conftest); the Fig. 5 example and the bound
 tests keep exercising the low-level ``map_dfg`` surface directly.
 """
-import numpy as np
 import pytest
 
 from repro import ual

@@ -6,7 +6,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpoint import latest_step, restore, save
 from repro.configs import smoke_config

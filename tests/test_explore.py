@@ -20,7 +20,7 @@ from repro import ual
 from repro.core.adl import hycube, spatial
 from repro.core.mapper import AdaptiveStrategy, spatial_ii
 
-PASS_NAMES = ["layout", "mii", "mapping", "lowering", "binding"]
+PASS_NAMES = ["layout", "mii", "mapping", "lowering", "verify", "binding"]
 
 
 # ---------------------------------------------------------------------------
@@ -43,6 +43,8 @@ def test_pipeline_pass_records_cold_and_warm(tmp_path):
     assert by_name["mapping"]["II"] == cold.II >= by_name["mii"]["mii"]
     assert by_name["lowering"]["cache"] == "miss"
     assert by_name["lowering"]["cm_bytes"] == cold.lowered.cm_bytes()
+    assert by_name["verify"]["ok"] and by_name["verify"]["errors"] == 0
+    assert cold.check_report is not None and cold.check_report.ok
     assert by_name["binding"] == {"backend": "sim", "requires_config": True,
                                   "runnable": True, "validatable": True}
     # the mapping pass dominates a cold compile's wall time
@@ -87,7 +89,8 @@ def test_custom_pipeline_pass_list():
                       use_cache=False)
     assert exe.success
     assert [p.name for p in exe.compile_info.passes] == \
-        ["layout", "mii", "count_ops", "mapping", "lowering", "binding"]
+        ["layout", "mii", "count_ops", "mapping", "lowering", "verify",
+         "binding"]
     assert seen["ops"] == len(program.laid.nodes)
 
 

@@ -116,6 +116,37 @@ def test_batched_engine_matches_reference_and_oracle(dfg, fab_name, B,
            (rstats.fired, rstats.idle_slots, rstats.max_mem_ports_used)
 
 
+@settings(max_examples=10, deadline=None)
+@given(random_dfg(), st.integers(0, 3))
+def test_verifier_clean_implies_executable(dfg, seed):
+    """The static verifier's soundness direction, for arbitrary DFGs: a
+    mapper-produced config never carries ERROR findings (the mapper never
+    emits the hazards the verifier hunts), and an error-free config must
+    execute without the engines' runtime checks firing.  Warnings are
+    allowed only for dead code (UAL007): the random generator freely
+    builds ops whose results nothing consumes, and the mapper faithfully
+    maps them — a true positive, not verifier noise."""
+    from repro.analysis.verifier import verify
+    from repro.core.lowering import link_config
+    from repro.core.simulator import simulate_reference
+    fab = hycube(4, 4)
+    layout = plan_layout(dfg, n_banks=fab.n_mem_ports)
+    laid = apply_layout(dfg, layout)
+    res = map_dfg(laid, fab, seed=seed, ii_max=24)
+    assert res.success
+    linked = link_config(res.config)
+    rep = verify(cfg=res.config, linked=linked)
+    assert rep.ok, rep.render()
+    assert {d.code for d in rep.warnings} <= {"UAL007"}, rep.render()
+    assert linked.unresolved_inputs == 0
+    rng = np.random.default_rng(seed)
+    mem = {k: rng.integers(-50, 50, n).astype(np.int32)
+           for k, n in dfg.arrays.items() if k != "out"}
+    # clean verdict => the runtime port/hazard checks stay silent
+    simulate_reference(res.config, flat_memory(layout, mem), 8,
+                       check_ports=True)
+
+
 @settings(max_examples=6, deadline=None)
 @given(random_dfg())
 def test_pallas_kernel_matches_simulator(dfg):

@@ -18,7 +18,6 @@ Contract under test:
   * ``stats()`` reports the serving numbers (p50/p99, achieved batch,
     samples/s, queue depth, rejects by reason, per-tenant totals).
 """
-import threading
 import time
 
 import numpy as np

@@ -1,12 +1,10 @@
 """System-level tests: the end-to-end drivers and distributed-training
 features (grad accumulation equivalence, int8 compression, restart)."""
-import json
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import smoke_config
 from repro.data.pipeline import DataConfig, host_batch
@@ -52,7 +50,7 @@ def test_int8_grad_compression_trains():
         for i in range(4):
             params, state, metrics = step(params, state, _batch(cfg, step=i))
             losses.append(float(metrics["total_loss"]))
-    assert all(np.isfinite(l) for l in losses)
+    assert all(np.isfinite(x) for x in losses)
 
 
 def test_compression_error_feedback_bounds_bias():
