@@ -12,11 +12,14 @@ runs a B=16 batched-sim throughput check off the shared lowered artifact
 (oracle parity + nonzero samples/s), a pallas JIT-engine gate (mixed-size
 batches through the persistent engine: oracle parity spot-check, trace
 count == bucket count), a 2-fabric x 2-strategy mini-sweep through
-``compile_many(workers=2)``, and a dynamic-batching service gate
+``compile_many(workers=2)``, a dynamic-batching service gate
 (32 requests through a ``max_batch=8`` ``ual.Service``, oracle parity
-spot-checked, nonzero samples/s) — a fast regression gate for the
-toolchain, mapping cache, execution engines, DSE front-end and serving
-layer (used by CI, which uploads ``artifacts/bench/smoke.json``).
+spot-checked, nonzero samples/s), and a 2-process mini cluster gate
+(32 requests through ``ual.ClusterService(workers=2)`` sharing one disk
+cache, parity spot-checked, recorded in ``smoke.json["cluster"]``) — a
+fast regression gate for the toolchain, mapping cache, execution
+engines, DSE front-end and serving layer (used by CI, which uploads
+``artifacts/bench/smoke.json``).
 """
 from __future__ import annotations
 
@@ -42,6 +45,7 @@ BENCHES = {
     "dse_explore": bench_dse.run,
     "exec_throughput": bench_exec.run,
     "serve_throughput": bench_serve.run,
+    "serve_scaling": bench_serve.run_cluster,
 }
 
 SMOKE_TARGETS = (
@@ -57,8 +61,10 @@ def smoke() -> int:
     """Compile one kernel per fabric (cold + warm), validate on sim, run a
     B=16 batched-sim throughput check, push mixed-size batches through
     the pallas persistent JIT engine, mini-sweep 2 fabrics x
-    2 strategies through ``compile_many(workers=2)``, then push 32
-    single-sample requests through a ``max_batch=8`` ``ual.Service``.
+    2 strategies through ``compile_many(workers=2)``, push 32
+    single-sample requests through a ``max_batch=8`` ``ual.Service``,
+    then 32 more through a 2-process ``ual.ClusterService`` sharing one
+    disk cache.
 
     Exit non-zero if any compile fails, any compiled config carries
     verifier findings (``exe.check_report`` must be clean — recorded
@@ -66,8 +72,9 @@ def smoke() -> int:
     mismatches, the
     warm compile misses the cache, the batched engine loses oracle parity
     or reports zero throughput, the JIT engine loses parity or retraces
-    on a warm bucket, the sweep pays redundant mappings, or the service
-    gate loses parity / reports zero samples/s.
+    on a warm bucket, the sweep pays redundant mappings, or either
+    serving gate (service / mini cluster) loses parity or reports zero
+    samples/s.
     Writes ``artifacts/bench/smoke.json`` (uploaded by CI).
     """
     import numpy as np
@@ -240,6 +247,53 @@ def smoke() -> int:
               f"{sps} samples/s, mean batch {stats['mean_batch']}, "
               f"parity={'ok' if parity else 'FAIL'} ==")
 
+    # -- mini cluster gate: 32 requests through a 2-process
+    # ClusterService (spawn — safe at any point, unlike fork); parity
+    # spot-check + nonzero samples/s + merged-stats sanity, so the
+    # multi-process front-end can't rot between full serve_scaling runs
+    cluster_json = None
+    with tempfile.TemporaryDirectory() as d:
+        from repro.core.dfg import interpret
+        target = ual.Target.from_name("hycube", rows=4, cols=4)
+        program = ual.Program.from_kernel(
+            SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports)
+        n_req = 32
+        rng = np.random.default_rng(4)
+        mems = [program.random_inputs(rng) for _ in range(n_req)]
+        with ual.ClusterService(workers=2, max_batch=8, max_wait_ms=5.0,
+                                max_queue=2 * n_req,
+                                warmup_buckets=(1, 8),
+                                cache_dir=d) as cs:
+            resps = [cs.submit(program, target, m, tenant="smoke")
+                     for m in mems]
+            outs = [r.result(timeout=300) for r in resps]
+            cstats = cs.stats()
+        spot = [0, 9, 17, n_req - 1]
+        parity = all(
+            np.array_equal(interpret(program.dfg, mems[i],
+                                     program.n_iters)[name], outs[i][name])
+            for i in spot for name in program.outputs)
+        sps = cstats["samples_per_s"]
+        if not parity:
+            failures.append("cluster: oracle parity mismatch")
+        if not sps > 0:
+            failures.append("cluster: zero samples/s")
+        if cstats["completed"] != n_req:
+            failures.append(f"cluster: {cstats['completed']}/{n_req} "
+                            f"requests completed")
+        if cstats["workers"] != 2:
+            failures.append(f"cluster: {cstats['workers']}/2 workers live")
+        cluster_json = {"requests": n_req, "workers": cstats["workers"],
+                        "parity_spot_checked": len(spot), "parity": parity,
+                        "samples_per_s": sps,
+                        "p99_ms": cstats["p99_ms"],
+                        "routing": cstats["routing"],
+                        "rejects": cstats["rejects"]}
+        print(f"\n== smoke: 2-process cluster, {n_req} requests: "
+              f"{sps} samples/s, "
+              f"routing {cstats['routing']['decisions']}, "
+              f"parity={'ok' if parity else 'FAIL'} ==")
+
     # -- pallas engine gate: mixed-size batches through the persistent
     # JIT engine; parity spot-check vs the oracle, trace count must equal
     # the number of distinct buckets touched (trace-once/run-many).
@@ -293,7 +347,8 @@ def smoke() -> int:
     save("smoke", {"fabrics": rows, "verifier": verifier_json,
                    "sweep": sweep_json,
                    "batched_sim": batched_json, "pallas_engine": engine_json,
-                   "service": service_json, "failures": failures})
+                   "service": service_json, "cluster": cluster_json,
+                   "failures": failures})
     for f in failures:
         print(f"FAIL {f}")
     return 1 if failures else 0

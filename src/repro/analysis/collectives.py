@@ -26,7 +26,7 @@ def main():
     args = ap.parse_args()
 
     from repro.launch.dryrun import lower_cell
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.dryrun import make_production_mesh
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     overrides = json.loads(args.overrides) if args.overrides else None
     cfg, shape, lowered, compiled = lower_cell(
@@ -57,7 +57,7 @@ def memory_main():  # pragma: no cover — CLI variant used by §Perf loop
     ap.add_argument("--overrides", default=None)
     args = ap.parse_args()
     from repro.launch.dryrun import lower_cell
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.dryrun import make_production_mesh
     mesh = make_production_mesh()
     overrides = json.loads(args.overrides) if args.overrides else None
     cfg, shape, lowered, compiled = lower_cell(args.arch, args.shape, mesh,

@@ -28,8 +28,20 @@ from repro.configs.shapes import SHAPES, cell_skip_reason                    # n
 from repro.launch.input_specs import (batch_structs, cache_structs,          # noqa: E402
                                       opt_structs, param_structs,
                                       token_structs)
-from repro.launch.mesh import make_production_mesh                           # noqa: E402
 from repro.train.optimizer import OptConfig                                  # noqa: E402
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512).
+
+    Quarantined here with its only consumers (this dry-run and the
+    collectives CLI, both of which force 512 host devices before jax
+    loads): host-scale code must not pull a 512-chip mesh constructor
+    out of ``repro.launch.mesh``.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
 
 
 def opt_for(cfg) -> OptConfig:

@@ -71,10 +71,11 @@ from repro.ual.backends import (Backend, get_backend, list_backends,
 from repro.ual.cache import (CACHE_VERSION, CacheStats, MappingCache,
                              default_cache, default_cache_dir,
                              set_default_cache)
+from repro.ual.cluster import ClusterService, Router
 from repro.ual.compiler import compile
 from repro.ual.engine import (CompiledKernelCache, KernelEngine,
-                              bucket_ladder, default_engine,
-                              set_default_engine)
+                              ShardedKernelEngine, bucket_ladder,
+                              default_engine, set_default_engine)
 from repro.ual.executable import CompileInfo, Executable, PassRecord
 from repro.ual.explore import (DesignPoint, ExploreReport, compile_many,
                                explore)
@@ -86,11 +87,13 @@ from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 
 __all__ = [
     "Backend", "CACHE_VERSION", "CacheStats", "CheckReport",
-    "CompileContext", "CompileInfo", "CompiledKernelCache", "CompilePass",
-    "DesignPoint", "Diagnostic", "Executable", "ExploreReport", "FABRICS",
-    "KernelEngine", "LinkedConfig", "MapperStrategy", "MappingCache",
-    "PassRecord", "Pipeline", "Program", "Response", "Service",
-    "ServiceRejected", "Target", "VerifyError", "VerifyPass",
+    "ClusterService", "CompileContext", "CompileInfo",
+    "CompiledKernelCache", "CompilePass", "DesignPoint", "Diagnostic",
+    "Executable", "ExploreReport", "FABRICS", "KernelEngine",
+    "LinkedConfig", "MapperStrategy", "MappingCache", "PassRecord",
+    "Pipeline", "Program", "Response", "Router", "Service",
+    "ServiceRejected", "ShardedKernelEngine", "Target", "VerifyError",
+    "VerifyPass",
     "bucket_ladder", "compile", "compile_many", "default_cache",
     "default_cache_dir", "default_engine", "default_pipeline", "explore",
     "get_backend", "link_config", "list_backends", "list_fabrics",

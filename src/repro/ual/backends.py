@@ -49,6 +49,11 @@ class Backend:
     #: config (or need no config at all) leave it False and keep the plain
     #: four-argument signature
     consumes_lowered: bool = False
+    #: backends that can pin one call to one jax device accept a
+    #: ``device=`` keyword in ``execute``/``execute_batch`` — the
+    #: serving cluster's replica router uses this to run per-device
+    #: replicas; leave False to never receive the keyword
+    supports_device: bool = False
 
     def execute(self, program: Program, result: Optional[MapResult],
                 mem: Mem, n_iters: int, **kw) -> Tuple[Mem, Info]:
@@ -118,15 +123,30 @@ class PallasBackend(Backend):
     tables live on device per engine, ``n_iters`` is traced, and batch
     sizes are padded up the bucket ladder so repeat traffic hits warm
     traces — trace once, run many.
+
+    Two multi-device modes (the serving cluster's substrates):
+
+      * default (``sharded=False``): accepts a per-call ``device=``
+        keyword (``supports_device``) routing the sweep through a
+        device-pinned replica engine — N calls on N devices run truly
+        concurrent replicas;
+      * ``sharded=True`` (registered as ``"pallas_sharded"``): every
+        sweep shard_maps the batch axis over ALL host devices through
+        one ``ShardedKernelEngine`` — one trace, N devices, per-device
+        bucket padding.
     """
 
     consumes_lowered = True
 
     def __init__(self, lanes: int = 128, interpret: bool = True,
-                 engine=None):
+                 engine=None, sharded: bool = False):
         self.lanes = lanes
         self.interpret = interpret
         self._engine = engine        # None -> the process-wide engine cache
+        self.sharded = sharded
+        # a sharded sweep spans every device; pinning it to one is a
+        # contradiction, so the router never offers the keyword
+        self.supports_device = not sharded
 
     @property
     def engine(self):
@@ -135,26 +155,41 @@ class PallasBackend(Backend):
         from repro.ual.engine import default_engine
         return default_engine()
 
-    def execute(self, program, result, mem, n_iters, lowered=None):
+    def execute(self, program, result, mem, n_iters, lowered=None,
+                device=None):
         outs, info = self.execute_batch(program, result, [mem], n_iters,
-                                        lowered=lowered)
+                                        lowered=lowered, device=device)
         return outs[0], info
 
-    def execute_batch(self, program, result, mems, n_iters, lowered=None):
+    def execute_batch(self, program, result, mems, n_iters, lowered=None,
+                      device=None):
         flats = program.flatten_batch(mems)
-        out, info = self.engine.run(_ensure_lowered(result, lowered), flats,
-                                    n_iters, lanes=self.lanes,
-                                    interpret=self.interpret)
+        linked = _ensure_lowered(result, lowered)
+        if self.sharded:
+            out, info = self.engine.sharded_run(linked, flats, n_iters,
+                                                lanes=self.lanes,
+                                                interpret=self.interpret)
+        else:
+            out, info = self.engine.run(linked, flats, n_iters,
+                                        lanes=self.lanes,
+                                        interpret=self.interpret,
+                                        device=device)
         info["batched"] = True
         return program.unflatten_batch(out), info
 
-    def warmup(self, program, result, lowered=None, buckets=None):
+    def warmup(self, program, result, lowered=None, buckets=None,
+               device=None):
         """Pre-trace the bucket ladder for this program's scratchpad width
         (``n_iters`` is traced, so one trace per bucket covers every trip
         count).  Returns the engine's stats."""
-        eng = self.engine.engine_for(_ensure_lowered(result, lowered),
-                                     lanes=self.lanes,
-                                     interpret=self.interpret)
+        linked = _ensure_lowered(result, lowered)
+        if self.sharded:
+            eng = self.engine.sharded_engine_for(linked, lanes=self.lanes,
+                                                 interpret=self.interpret)
+        else:
+            eng = self.engine.engine_for(linked, lanes=self.lanes,
+                                         interpret=self.interpret,
+                                         device=device)
         return eng.warmup(program.layout.total_words, buckets)
 
 
@@ -195,3 +230,4 @@ def list_backends() -> List[str]:
 register_backend("interp", InterpBackend())
 register_backend("sim", SimBackend())
 register_backend("pallas", PallasBackend())
+register_backend("pallas_sharded", PallasBackend(sharded=True))

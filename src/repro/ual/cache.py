@@ -31,6 +31,23 @@ pipeline can double-check under it — two threads compiling the same
 lowering (the execution service leans on this when a cold tenant's first
 requests arrive on several workers at once).
 
+The disk layer is additionally safe under multi-PROCESS use (the
+``ClusterService`` worker pool shares one directory):
+
+  * writes publish atomically — pickle to a per-writer tmp file, then
+    ``os.replace`` into place — so a reader never sees a torn entry,
+  * a concurrent writer winning the race is tolerated: if our own
+    publish fails but the final path exists, someone else stored an
+    equivalent artifact and we read it back instead of erroring,
+  * ``process_lock_key(key)`` hands out a cross-process analogue of
+    ``lock_key``: an ``fcntl.flock``-backed lock on a per-key ``.lock``
+    file in the disk dir.  The pipeline's mapping pass takes it for cold
+    compiles (and keeps it through lowering), so N worker *processes*
+    racing on one cold tenant pay exactly one mapping + one lowering
+    cluster-wide — the losers block, then read the winner's entry off
+    disk.  Diskless caches get a no-op lock (thread-level protection
+    still applies).
+
 The disk layer defaults to ``$REPRO_UAL_CACHE`` or ``artifacts/ual_cache``
 next to the repo; pass ``MappingCache(disk_dir=None)`` for a purely
 in-process cache.
@@ -113,6 +130,48 @@ class CacheStats:
         }
 
 
+class _KeyFileLock:
+    """Cross-process exclusive lock on one cache key, backed by
+    ``fcntl.flock`` on a per-key ``.lock`` file in the cache's disk dir.
+
+    Same acquire/release shape as ``threading.Lock`` so the pipeline can
+    hold it across passes the way it holds the thread-level key lock.
+    The lock file itself is never deleted (deleting a file other
+    processes may be flocking reintroduces the race the lock exists to
+    close); flock state dies with the fd, so a crashed holder never
+    wedges the key.  Not reentrant — one acquire per compile.
+    """
+
+    def __init__(self, path: Path) -> None:
+        self._path = path
+        self._fd: Optional[int] = None
+
+    def acquire(self) -> None:
+        import fcntl
+        self._path.parent.mkdir(parents=True, exist_ok=True)
+        fd = os.open(self._path, os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+        except OSError:
+            os.close(fd)
+            raise
+        self._fd = fd
+
+    def release(self) -> None:
+        import fcntl
+        fd, self._fd = self._fd, None
+        if fd is not None:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+            os.close(fd)
+
+    def __enter__(self) -> "_KeyFileLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
 @dataclass
 class MappingCache:
     disk_dir: Optional[Path] = field(default_factory=default_cache_dir)
@@ -191,6 +250,30 @@ class MappingCache:
                 return True
             return self.disk_dir is not None and self._path(key).exists()
 
+    def _write_atomic(self, path: Path, payload: object) -> None:
+        """Publish ``payload`` at ``path`` atomically (tmp + os.replace).
+
+        Runs OUTSIDE the cache lock — a slow disk store must not stall
+        unrelated lookups.  Failures are tolerated when the final path
+        exists (a concurrent writer won the race and published an
+        equivalent artifact; the caller's in-memory copy is already
+        installed); a failure with no entry on disk propagates — that is
+        a real I/O problem, not a race."""
+        self.disk_dir.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(
+            f".tmp.{os.getpid()}.{threading.get_ident()}")
+        try:
+            with tmp.open("wb") as f:
+                pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)  # atomic: racers never read torn files
+        except OSError:
+            try:
+                tmp.unlink()
+            except OSError:
+                pass
+            if not path.exists():
+                raise
+
     def lock_key(self, key: Tuple[str, str]) -> object:
         """The per-key compile lock: the pipeline's mapping and lowering
         passes serialize cold compiles of one digest pair under it
@@ -202,6 +285,23 @@ class MappingCache:
                 lock = self._key_locks[key] = threading.Lock()
             return lock
 
+    def process_lock_key(self, key: Tuple[str, str]
+                         ) -> Optional[_KeyFileLock]:
+        """Cross-PROCESS analogue of ``lock_key``: an un-acquired
+        ``fcntl.flock``-backed lock on this key's ``.lock`` file, or
+        None when there is no disk layer to coordinate over (or no
+        ``fcntl`` on this platform).  The pipeline's mapping pass holds
+        it across cold mapping + lowering so N processes sharing the
+        disk dir pay exactly one of each per key — losers block, then
+        read the winner's entry off disk."""
+        if self.disk_dir is None:
+            return None
+        try:
+            import fcntl                               # noqa: F401
+        except ImportError:                            # pragma: no cover
+            return None
+        return _KeyFileLock(self._path(key).with_suffix(".lock"))
+
     def put(self, key: Tuple[str, str], result: MapResult, *,
             memory_only: bool = False) -> None:
         with self._lock:
@@ -209,16 +309,7 @@ class MappingCache:
             self.stats.stores += 1
         if memory_only or self.disk_dir is None:
             return
-        # pickle + write OUTSIDE the cache lock: a slow disk store must
-        # not stall every unrelated lookup; the atomic rename (and the
-        # per-key compile lock upstream) already handles racing writers
-        self.disk_dir.mkdir(parents=True, exist_ok=True)
-        path = self._path(key)
-        tmp = path.with_suffix(
-            f".tmp.{os.getpid()}.{threading.get_ident()}")
-        with tmp.open("wb") as f:
-            pickle.dump(result, f, protocol=pickle.HIGHEST_PROTOCOL)
-        tmp.replace(path)  # atomic: racers never read torn files
+        self._write_atomic(self._path(key), result)
 
     # -- lowered-artifact layer (same two-layer contract, same key) ---------
     # Entries are stored WITH the fingerprint of the configuration they
@@ -276,15 +367,7 @@ class MappingCache:
             self.stats.lowered_stores += 1
         if memory_only or self.disk_dir is None:
             return
-        # disk write outside the cache lock (see put())
-        self.disk_dir.mkdir(parents=True, exist_ok=True)
-        path = self._lowered_path(key)
-        tmp = path.with_suffix(
-            f".tmp.{os.getpid()}.{threading.get_ident()}")
-        with tmp.open("wb") as f:
-            pickle.dump((fingerprint, linked), f,
-                        protocol=pickle.HIGHEST_PROTOCOL)
-        tmp.replace(path)  # atomic: racers never read torn files
+        self._write_atomic(self._lowered_path(key), (fingerprint, linked))
 
     # -- aggregate view ------------------------------------------------------
     def _disk_entry_counts(self) -> Tuple[int, int]:

@@ -1,0 +1,17 @@
+"""``repro.ual.cluster`` — sharded serving: replicas, routing, processes.
+
+Three layers, smallest first:
+
+  * ``replica`` — ``ReplicaSlot`` + ``Router``: least-loaded dispatch
+    with class-affinity tiebreak and idle work stealing across an
+    in-process pool of worker threads (used by ``Service(replicas=N)``).
+  * ``ShardedKernelEngine`` (in ``repro.ual.engine``) — one jit trace
+    shard_mapped over the batch axis of every local device.
+  * ``service`` — ``ClusterService``: N worker processes behind one
+    front-end, sharing the on-disk artifact cache and merging their
+    ``stats()`` into a single cluster view.
+"""
+from repro.ual.cluster.replica import ReplicaSlot, Router
+from repro.ual.cluster.service import ClusterService
+
+__all__ = ("ClusterService", "ReplicaSlot", "Router")

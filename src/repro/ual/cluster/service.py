@@ -1,0 +1,474 @@
+"""``ClusterService`` — the multi-process serving front-end.
+
+One parent process routes single-sample requests to N **worker
+processes**, each running a full in-process ``Service`` (queue ->
+coalesce -> batched sweep, optionally replicated over devices).  The
+pieces:
+
+  * **front-end routing** (``submit``) — least-loaded worker by
+    in-flight count; among ties, a worker that has already registered
+    the request's compatibility class wins (its Executable and engine
+    traces are warm).  Same policy as the in-process ``Router``, one
+    level up.
+  * **lazy class registration** — the first request of a class on a
+    worker ships the ``Program`` (with its unpicklable ``make_mem``
+    generator stripped — the digest ignores it) and ``Target`` once;
+    later requests send only arrays.
+  * **shared artifact cache** — every worker opens the same on-disk
+    ``MappingCache`` directory.  With the cache's cross-process per-key
+    locks, a cold tenant pays ONE mapping + lowering cluster-wide; the
+    other workers block briefly and load the artifact.
+  * **collector thread** (parent) — drains the workers' outbox and
+    resolves the parent-side ``Response`` futures, so ``submit`` callers
+    use the exact same future API as the in-process service.
+  * **watchdog thread** (parent) — a worker process dying does not
+    strand its in-flight requests: they resolve as ``ServiceRejected``
+    (``worker-died``) and the worker leaves the routing set.
+  * **merged stats** (``stats()``) — one cluster view: aggregate
+    completed / samples-per-second / rejects, conservative p50/p99
+    (worst worker), front-end routing decisions, plus each worker's full
+    ``Service.stats()`` snapshot (including its replica router, when
+    replicated) under ``per_worker``.
+
+Workers are started with the ``spawn`` method: forking after jax has
+initialized deadlocks, and spawn keeps each worker's jax runtime (and
+any ``XLA_FLAGS`` device forcing in ``worker_env``) independent of the
+parent's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import multiprocessing as mp
+import os
+import queue as queue_mod
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: how often the watchdog polls worker liveness
+_WATCH_TICK_S = 0.2
+
+
+def _worker_main(widx: int, inbox, outbox, cfg: Dict[str, object]) -> None:
+    """One worker process: env -> Service -> message loop.
+
+    Module-level (spawn target must be importable), and ALL repro/jax
+    imports happen here, after ``cfg["env"]`` lands in ``os.environ`` —
+    so per-worker ``XLA_FLAGS`` (e.g. ``forced_device_env``) are set
+    before jax ever loads in this process.
+    """
+    os.environ.update(cfg.get("env") or {})
+    from repro.ual.cache import MappingCache
+    from repro.ual.service import Service, ServiceRejected
+
+    cache = (MappingCache(disk_dir=cfg["cache_dir"])
+             if cfg.get("cache_dir") else None)
+    svc = Service(max_batch=cfg["max_batch"],
+                  max_wait_ms=cfg["max_wait_ms"],
+                  max_queue=cfg["max_queue"],
+                  workers=cfg["threads"],
+                  replicas=cfg.get("replicas", 1),
+                  warmup_buckets=cfg.get("warmup_buckets"),
+                  cache=cache)
+    classes: Dict[tuple, tuple] = {}
+
+    def _forward(req_id: int):
+        """Resolution callback: ship the local future's outcome home."""
+        def cb(resp):
+            exc = resp.exception(timeout=0)
+            if exc is None:
+                outbox.put(("done", req_id, widx, resp.result(0),
+                            dict(resp.info)))
+            elif isinstance(exc, ServiceRejected):
+                outbox.put(("rej", req_id, widx, exc.reason, str(exc)))
+            else:
+                outbox.put(("err", req_id, widx,
+                            f"{type(exc).__name__}: {exc}"))
+        return cb
+
+    outbox.put(("ready", widx))
+    try:
+        while True:
+            msg = inbox.get()
+            kind = msg[0]
+            if kind == "stop":
+                break
+            if kind == "reg":
+                _, class_id, program, target = msg
+                classes[class_id] = (program, target)
+            elif kind == "req":
+                (_, req_id, class_id, mem, n_iters, tenant,
+                 deadline_ms) = msg
+                program, target = classes[class_id]
+                resp = svc.submit(program, target, mem, n_iters=n_iters,
+                                  tenant=tenant, deadline_ms=deadline_ms)
+                resp.add_done_callback(_forward(req_id))
+            elif kind == "stats":
+                outbox.put(("stats", widx, svc.stats()))
+    finally:
+        svc.shutdown(timeout=60.0)
+        outbox.put(("stopped", widx))
+
+
+class ClusterService:
+    """Sharded serving cluster: N worker processes, one front-end.
+
+        cs = ual.ClusterService(workers=4, max_batch=32, max_wait_ms=2)
+        fut = cs.submit(program, target, A=a, B=b, tenant="gemm-app")
+        out = fut.result(timeout=60)      # same future API as Service
+        print(cs.stats()["samples_per_s"], cs.stats()["workers"])
+        cs.shutdown()
+
+    ``worker_threads`` / ``replicas`` / ``warmup_buckets`` configure
+    each worker's inner ``Service``; ``worker_env`` is merged into each
+    worker's environment before jax loads there (device forcing goes
+    here — see ``launch.mesh.forced_device_env``).  ``cache_dir`` is the
+    shared on-disk artifact cache (defaults to the user-level cache
+    directory); pass an empty string to disable disk sharing.
+    """
+
+    def __init__(self, workers: int = 2, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 1024,
+                 worker_threads: int = 1, replicas: int = 1,
+                 warmup_buckets: Optional[Sequence[int]] = None,
+                 cache_dir: Optional[str] = None,
+                 worker_env: Optional[Dict[str, str]] = None,
+                 start: bool = True,
+                 start_timeout_s: float = 180.0) -> None:
+        if workers < 1:
+            raise ValueError(f"need at least 1 worker, got {workers}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.n_workers = workers
+        self.max_queue = max_queue
+        self.start_timeout_s = start_timeout_s
+        if cache_dir is None:
+            from repro.ual.cache import default_cache_dir
+            cache_dir = str(default_cache_dir())
+        self._cfg = {
+            "max_batch": max_batch, "max_wait_ms": max_wait_ms,
+            "max_queue": max_queue, "threads": worker_threads,
+            "replicas": replicas,
+            "warmup_buckets": (tuple(warmup_buckets)
+                               if warmup_buckets is not None else None),
+            "cache_dir": cache_dir or None,
+            "env": dict(worker_env or {}),
+        }
+
+        self._lock = threading.Lock()
+        self._stats_cond = threading.Condition(self._lock)
+        self._closed = False
+        self._started = False
+        self._req_ids = itertools.count()
+        #: req_id -> (Response, widx, tenant)
+        self._inflight: Dict[int, Tuple[object, int, str]] = {}
+        self._load: List[int] = [0] * workers          # in-flight per worker
+        self._registered: List[set] = [set() for _ in range(workers)]
+        self._alive: List[bool] = [False] * workers
+        self.decisions: Dict[str, int] = {"affinity": 0, "least_loaded": 0}
+        self._stats_buf: Dict[int, Dict[str, object]] = {}
+        self._stats_want: set = set()
+
+        self._procs: List[mp.process.BaseProcess] = []
+        self._inboxes: List[object] = []
+        self._outbox = None
+        self._threads: List[threading.Thread] = []
+        self._ready = threading.Event()
+        self._n_ready = 0
+        self._n_stopped = 0
+        if start:
+            self.start()
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "ClusterService":
+        with self._lock:
+            if self._started or self._closed:
+                return self
+            self._started = True
+        ctx = mp.get_context("spawn")
+        self._outbox = ctx.Queue()
+        for i in range(self.n_workers):
+            inbox = ctx.Queue()
+            p = ctx.Process(target=_worker_main,
+                            args=(i, inbox, self._outbox, self._cfg),
+                            name=f"ual-cluster-worker-{i}", daemon=True)
+            p.start()
+            self._inboxes.append(inbox)
+            self._procs.append(p)
+        for target, name in ((self._collector_loop, "ual-cluster-collect"),
+                             (self._watchdog_loop, "ual-cluster-watch")):
+            t = threading.Thread(target=target, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+        if not self._ready.wait(self.start_timeout_s):
+            self.shutdown(timeout=10.0)
+            raise RuntimeError(
+                f"cluster start timed out: {self._n_ready}/{self.n_workers} "
+                f"workers ready within {self.start_timeout_s}s")
+        return self
+
+    def shutdown(self, timeout: Optional[float] = 120.0) -> None:
+        """Stop admitting, let every worker flush, join, reject leftovers."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            started = self._started
+        if not started:
+            return
+        for i, inbox in enumerate(self._inboxes):
+            try:
+                inbox.put(("stop",))
+            except (OSError, ValueError):
+                pass
+        deadline = (time.perf_counter() + timeout
+                    if timeout is not None else None)
+        for p in self._procs:
+            rem = (max(0.0, deadline - time.perf_counter())
+                   if deadline is not None else None)
+            p.join(rem)
+            if p.is_alive():
+                p.terminate()
+        # collector/watchdog see _closed + dead procs and exit; give the
+        # collector a moment to drain late completions before rejecting
+        for t in self._threads:
+            t.join(5.0)
+        with self._lock:
+            leftovers = list(self._inflight.values())
+            self._inflight.clear()
+        from repro.ual.service import ServiceRejected
+        for resp, _widx, _tenant in leftovers:
+            resp._resolve(exc=ServiceRejected(
+                "shutdown", "cluster stopped before the response arrived"))
+
+    def __enter__(self) -> "ClusterService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- admission + routing --------------------------------------------------
+    def submit(self, program, target,
+               mem: Optional[Dict[str, np.ndarray]] = None, *,
+               n_iters: Optional[int] = None, tenant: str = "default",
+               deadline_ms: Optional[float] = None,
+               **named: np.ndarray):
+        """Admit one request; returns a ``Response`` future (same API as
+        ``Service.submit``).  Routing: least-loaded worker, class-warm
+        affinity tiebreak."""
+        from repro.ual.service import ServiceRejected
+        from repro.ual.service.queue import Response
+
+        arrays = dict(mem or {})
+        arrays.update(named)
+        program.check_arrays(arrays)
+        n = n_iters if n_iters is not None else program.n_iters
+        class_id = (program.digest, target.digest, target.backend, n)
+        resp = Response()
+
+        def _reject(reason: str, detail: str):
+            resp._resolve(exc=ServiceRejected(reason, detail))
+            return resp
+
+        with self._lock:
+            if self._closed:
+                return _reject("shutdown", "cluster service is shut down")
+            live = [i for i in range(self.n_workers) if self._alive[i]]
+            if not live:
+                return _reject("worker-died", "no live workers")
+            if len(self._inflight) >= self.max_queue:
+                return _reject("queue-full",
+                               f"{len(self._inflight)} requests in flight "
+                               f"(max_queue={self.max_queue})")
+            min_load = min(self._load[i] for i in live)
+            cands = [i for i in live if self._load[i] == min_load]
+            warm = [i for i in cands if class_id in self._registered[i]]
+            if warm:
+                widx = warm[0]
+                self.decisions["affinity"] += 1
+            else:
+                widx = cands[0]
+                self.decisions["least_loaded"] += 1
+            req_id = next(self._req_ids)
+            self._inflight[req_id] = (resp, widx, tenant)
+            self._load[widx] += 1
+            need_reg = class_id not in self._registered[widx]
+            if need_reg:
+                self._registered[widx].add(class_id)
+        if need_reg:
+            # make_mem is a convenience closure (often a lambda): strip
+            # it for the wire — digest ignores it, workers never call it
+            self._inboxes[widx].put(
+                ("reg", class_id,
+                 dataclasses.replace(program, make_mem=None), target))
+        self._inboxes[widx].put(
+            ("req", req_id, class_id, arrays, n, tenant, deadline_ms))
+        return resp
+
+    # -- parent-side threads --------------------------------------------------
+    def _settle(self, req_id: int):
+        """Remove a finished request from the routing table."""
+        with self._lock:
+            entry = self._inflight.pop(req_id, None)
+            if entry is not None:
+                self._load[entry[1]] -= 1
+            return entry
+
+    def _collector_loop(self) -> None:
+        from repro.ual.service import ServiceRejected
+        while True:
+            try:
+                msg = self._outbox.get(timeout=0.1)
+            except queue_mod.Empty:
+                with self._lock:
+                    if self._closed and not self._inflight:
+                        return
+                    if self._n_stopped >= self.n_workers:
+                        return
+                continue
+            except (OSError, ValueError):
+                return
+            kind = msg[0]
+            if kind == "ready":
+                with self._lock:
+                    self._alive[msg[1]] = True
+                    self._n_ready += 1
+                    ready = self._n_ready >= self.n_workers
+                if ready:
+                    self._ready.set()
+            elif kind == "done":
+                _, req_id, widx, out, info = msg
+                entry = self._settle(req_id)
+                if entry is not None:
+                    info["worker"] = widx
+                    entry[0]._resolve(out, **info)
+            elif kind == "rej":
+                _, req_id, widx, reason, detail = msg
+                entry = self._settle(req_id)
+                if entry is not None:
+                    entry[0]._resolve(
+                        exc=ServiceRejected(reason, detail))
+            elif kind == "err":
+                _, req_id, widx, text = msg
+                entry = self._settle(req_id)
+                if entry is not None:
+                    entry[0]._resolve(exc=RuntimeError(
+                        f"worker {widx}: {text}"))
+            elif kind == "stats":
+                with self._stats_cond:
+                    self._stats_buf[msg[1]] = msg[2]
+                    self._stats_want.discard(msg[1])
+                    self._stats_cond.notify_all()
+            elif kind == "stopped":
+                with self._lock:
+                    self._alive[msg[1]] = False
+                    self._n_stopped += 1
+
+    def _watchdog_loop(self) -> None:
+        """A dead worker's in-flight requests reject instead of hanging."""
+        from repro.ual.service import ServiceRejected
+        while True:
+            with self._lock:
+                if self._closed:
+                    return
+            time.sleep(_WATCH_TICK_S)
+            dead: List[int] = []
+            with self._lock:
+                for i, p in enumerate(self._procs):
+                    if self._alive[i] and not p.is_alive():
+                        self._alive[i] = False
+                        dead.append(i)
+                if not dead:
+                    continue
+                orphans = [(rid, entry) for rid, entry
+                           in self._inflight.items() if entry[1] in dead]
+                for rid, entry in orphans:
+                    del self._inflight[rid]
+                    self._load[entry[1]] -= 1
+            with self._stats_cond:
+                if self._stats_want & set(dead):
+                    self._stats_want -= set(dead)
+                    self._stats_cond.notify_all()
+            for rid, (resp, widx, _tenant) in orphans:
+                resp._resolve(exc=ServiceRejected(
+                    "worker-died",
+                    f"worker {widx} exited with the request in flight"))
+
+    # -- observability --------------------------------------------------------
+    def queue_depth(self) -> int:
+        """Requests admitted but not yet resolved, cluster-wide — the
+        number the ``max_queue`` bound rejects against.  Cheap (one lock,
+        no worker round-trip), so load generators can sample it hot."""
+        with self._lock:
+            return len(self._inflight)
+
+    def stats(self, timeout: float = 30.0) -> Dict[str, object]:
+        """One merged cluster view + each worker's full snapshot.
+
+        Aggregates are sums (completed / rejects / samples-per-second /
+        queue depth); latency percentiles are the WORST worker's (a
+        cluster is as slow as its slowest replica).  ``routing`` is the
+        front-end's decision counters; per-worker replica routers (when
+        ``replicas > 1``) appear inside each ``per_worker`` snapshot and
+        their steal counts are summed into ``router_steals``.
+        """
+        with self._lock:
+            live = [i for i in range(self.n_workers) if self._alive[i]]
+        with self._stats_cond:
+            self._stats_buf = {}
+            self._stats_want = set(live)
+        for i in live:
+            try:
+                self._inboxes[i].put(("stats",))
+            except (OSError, ValueError):
+                with self._stats_cond:
+                    self._stats_want.discard(i)
+        deadline = time.perf_counter() + timeout
+        with self._stats_cond:
+            while self._stats_want:
+                rem = deadline - time.perf_counter()
+                if rem <= 0 or not self._stats_cond.wait(rem):
+                    break
+            snaps = dict(self._stats_buf)
+        with self._lock:
+            merged: Dict[str, object] = {
+                "cluster": True,
+                "workers": len(live),
+                "inflight": len(self._inflight),
+                "routing": {"decisions": dict(self.decisions),
+                            "load": list(self._load)},
+            }
+        rejects: Dict[str, int] = {}
+        steals = 0
+        for s in snaps.values():
+            for reason, n in s.get("rejects", {}).items():
+                rejects[reason] = rejects.get(reason, 0) + n
+            steals += s.get("router", {}).get("steals", 0)
+        p50s = [s["p50_ms"] for s in snaps.values()
+                if s.get("p50_ms") is not None]
+        p99s = [s["p99_ms"] for s in snaps.values()
+                if s.get("p99_ms") is not None]
+        merged.update({
+            "completed": sum(s.get("completed", 0) for s in snaps.values()),
+            "rejected": sum(s.get("rejected", 0) for s in snaps.values()),
+            "rejects": rejects,
+            "errors": sum(s.get("errors", 0) for s in snaps.values()),
+            "queue_depth": sum(s.get("queue_depth", 0)
+                               for s in snaps.values()),
+            "samples_per_s": round(sum(s.get("samples_per_s", 0.0)
+                                       for s in snaps.values()), 1),
+            "exec_samples_per_s": round(
+                sum(s.get("exec_samples_per_s", 0.0)
+                    for s in snaps.values()), 1),
+            "p50_ms": max(p50s) if p50s else None,
+            "p99_ms": max(p99s) if p99s else None,
+            "router_steals": steals,
+            "per_worker": {i: snaps[i] for i in sorted(snaps)},
+        })
+        return merged
+
+
+__all__ = ("ClusterService",)

@@ -28,6 +28,21 @@ Observability: every engine counts traces, calls, per-bucket hits and
 padding waste; ``CompiledKernelCache.stats()`` aggregates them (the
 execution service surfaces this in ``Service.stats()["engine"]``, and
 ``Executable.warmup()`` reports it in ``last_info``).
+
+Multi-device (the serving-cluster substrate, ``repro.ual.cluster``):
+
+  * ``KernelEngine(device=...)`` pins one engine to one device — tables
+    and inputs are committed there, so N engines on N devices execute
+    truly independent replicas (the Router's ReplicaPool path),
+  * ``ShardedKernelEngine`` ``shard_map``s the *batch axis* of the same
+    kernel over the host's 1-D ``data`` mesh
+    (``launch.mesh.make_host_mesh``): tables are replicated once, each
+    device runs one per-device bucket block, and ONE trace drives all
+    local devices.  Padding is per-device — a global block is
+    ``n_devices x bucket_for(ceil(chunk / n_devices))`` rows — so the
+    bucket-ladder trace economy survives sharding unchanged.  Engines
+    are cached per ``(fingerprint, lanes, interpret, placement)`` via
+    ``engine_for(device=...)`` / ``sharded_engine_for``.
 """
 from __future__ import annotations
 
@@ -67,25 +82,36 @@ class KernelEngine:
     Owns the device-resident tables (uploaded once, closed over as jit
     constants) and the single jitted entry point; ``jax.jit`` specializes
     it per ``(M, bucket)`` shape, and the ladder keeps that set small.
+
+    ``device=`` pins the engine (tables AND per-call operands) to one
+    device — the replica path: N pinned engines on N host devices
+    execute concurrently with zero shared state.
     """
+
+    ENGINE_NAME = "pallas-jit"
+
+    def _info_extra(self) -> Dict[str, object]:
+        """Engine-flavor extras merged into per-call info and stats."""
+        return {}
 
     def __init__(self, linked: LinkedConfig, *, lanes: int = 128,
                  interpret: bool = True,
-                 buckets: Optional[Sequence[int]] = None) -> None:
+                 buckets: Optional[Sequence[int]] = None,
+                 device=None) -> None:
         import jax
         import jax.numpy as jnp
 
         self.linked = linked
         self.lanes = lanes
         self.interpret = interpret
+        self.device = device          # None -> jax default placement
         self.buckets = bucket_ladder(lanes, buckets)
         self.fingerprint = lowered_fingerprint(linked)
+        self._jax = jax
+        self._jnp = jnp
         # upload the CM image once per engine; every trace closes over
         # these device arrays as constants — never re-fed per call
-        self._tables = tuple(
-            jax.device_put(jnp.asarray(t, jnp.int32))
-            for t in (linked.scalar, linked.ops, linked.regw))
-        self._jnp = jnp
+        self._tables = self._put_tables(linked)
         # counters: traces bumps at TRACE time (a Python side effect of
         # the traced function), so it counts actual retraces, not calls.
         # Two locks: _trace_lock serializes cold traces (held for seconds),
@@ -101,6 +127,22 @@ class KernelEngine:
         self._trace_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         self._fn = jax.jit(self._traced)
+
+    # -- placement (overridden by the sharded engine) -------------------------
+    def _put_tables(self, linked: LinkedConfig) -> tuple:
+        """Upload the CM image to this engine's placement."""
+        jax, jnp = self._jax, self._jnp
+        return tuple(
+            jax.device_put(jnp.asarray(t, jnp.int32), self.device)
+            for t in (linked.scalar, linked.ops, linked.regw))
+
+    def _put_operand(self, arr):
+        """One per-call operand (niter / mem block) onto the placement.
+        Committed explicitly when the engine is device-pinned, so jit
+        runs on THAT device instead of moving everything to the default."""
+        if self.device is None:
+            return self._jnp.asarray(arr)
+        return self._jax.device_put(self._jnp.asarray(arr), self.device)
 
     # -- the traced function --------------------------------------------------
     def _traced(self, niter, mem):
@@ -119,6 +161,17 @@ class KernelEngine:
                 return bk
         return self.buckets[-1]
 
+    # -- the block plan (overridden by the sharded engine) --------------------
+    def _capacity(self) -> int:
+        """Rows one block can carry; ``run`` chunks bigger batches."""
+        return self.buckets[-1]
+
+    def _block_rows(self, chunk: int) -> int:
+        """Padded row count the block for ``chunk`` samples executes at
+        (``chunk <= _capacity()``).  The sharded engine pads per device:
+        ``n_devices * bucket_for(ceil(chunk / n_devices))``."""
+        return self.bucket_for(chunk)
+
     def _call_block(self, block: np.ndarray, niter
                     ) -> Tuple[np.ndarray, bool]:
         """One padded (bucket, M) block through the jitted entry point;
@@ -130,10 +183,10 @@ class KernelEngine:
         with self._stats_lock:
             warm = key in self._warm
         if warm:
-            return np.asarray(self._fn(niter, self._jnp.asarray(block))), \
+            return np.asarray(self._fn(niter, self._put_operand(block))), \
                 False
         with self._trace_lock:
-            out = np.asarray(self._fn(niter, self._jnp.asarray(block)))
+            out = np.asarray(self._fn(niter, self._put_operand(block)))
             with self._stats_lock:
                 self._warm.add(key)
         return out, True
@@ -149,38 +202,40 @@ class KernelEngine:
         jnp = self._jnp
         flats = np.ascontiguousarray(flats, np.int32)
         B, M = flats.shape
-        niter = jnp.asarray(n_iters, jnp.int32).reshape(1, 1)
+        niter = self._put_operand(
+            jnp.asarray(n_iters, jnp.int32).reshape(1, 1))
         out = np.empty((B, M), np.int32)
         used: List[int] = []
         cold_blocks = 0
-        top = self.buckets[-1]
+        top = self._capacity()
         i = 0
         while i < B:
             chunk = min(B - i, top)
-            bucket = self.bucket_for(chunk)
+            rows = self._block_rows(chunk)
             block = flats[i:i + chunk]
-            if bucket != chunk:
+            if rows != chunk:
                 block = np.concatenate(
-                    [block, np.zeros((bucket - chunk, M), np.int32)])
+                    [block, np.zeros((rows - chunk, M), np.int32)])
             block_out, was_cold = self._call_block(block, niter)
             out[i:i + chunk] = block_out[:chunk]
             cold_blocks += was_cold
-            used.append(bucket)
+            used.append(rows)
             i += chunk
         with self._stats_lock:
-            for bucket in used:
-                self.bucket_calls[bucket] = \
-                    self.bucket_calls.get(bucket, 0) + 1
+            for rows in used:
+                self.bucket_calls[rows] = \
+                    self.bucket_calls.get(rows, 0) + 1
             self.padded_samples += sum(used) - B
             self.calls += 1
             self.samples += B
             traces_total = self.traces
         info = {
-            "engine": "pallas-jit",
+            "engine": self.ENGINE_NAME,
             "buckets": used,
             "padded": sum(used) - B,
             "traced": cold_blocks,
             "traces_total": traces_total,
+            **self._info_extra(),
         }
         return out, info
 
@@ -192,13 +247,13 @@ class KernelEngine:
         ladder snap UP to the bucket that will actually execute them
         (``bucket_for``), so re-warming is always a no-op.  Returns this
         engine's stats."""
-        want = sorted({self.bucket_for(b) for b in
+        want = sorted({self._block_rows(min(b, self._capacity())) for b in
                        bucket_ladder(self.lanes, buckets or self.buckets)})
-        for bucket in want:
+        for rows in want:
             with self._stats_lock:
-                warm = (M, bucket) in self._warm
+                warm = (M, rows) in self._warm
             if not warm:
-                self.run(np.zeros((bucket, M), np.int32), 1)
+                self.run(np.zeros((rows, M), np.int32), 1)
         return self.stats()
 
     # -- observability --------------------------------------------------------
@@ -220,43 +275,171 @@ class KernelEngine:
             "hit_ratio": round(hits / calls, 4) if calls else None,
             "buckets": self.buckets,
             **snap,
+            **self._info_extra(),
         }
+
+
+class ShardedKernelEngine(KernelEngine):
+    """The multi-device engine: one trace drives all local devices.
+
+    ``shard_map``s the batch axis of the persistent kernel over a 1-D
+    ``data`` mesh (default: ``launch.mesh.make_host_mesh()`` — every
+    device on the host).  The linked tables are uploaded once with a
+    *replicated* sharding; each device executes one per-device bucket
+    block of the batch, so a global block is
+    ``n_devices x bucket_for(ceil(chunk / n_devices))`` rows and the
+    bucket-ladder trace economy is unchanged — the warm-shape set and
+    trace count stay O(#buckets) while throughput scales with the mesh.
+
+    ``check_rep=False`` on the shard_map is required: pallas_call has no
+    replication rule, and the body touches only per-device data anyway.
+
+    Parity contract: bit-exact with the single-device engine (and the
+    interp oracle) for every batch size, including ragged final chunks —
+    padding rows are zero blocks whose outputs are sliced off, exactly
+    as in the single-device path.
+    """
+
+    ENGINE_NAME = "pallas-jit-sharded"
+
+    def __init__(self, linked: LinkedConfig, *, lanes: int = 128,
+                 interpret: bool = True,
+                 buckets: Optional[Sequence[int]] = None,
+                 mesh=None) -> None:
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        if mesh.devices.ndim != 1:
+            raise ValueError(
+                f"ShardedKernelEngine needs a 1-D mesh (the batch axis), "
+                f"got shape {mesh.devices.shape}")
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        self.n_devices = int(mesh.devices.size)
+        super().__init__(linked, lanes=lanes, interpret=interpret,
+                         buckets=buckets)
+
+    def _info_extra(self) -> Dict[str, object]:
+        return {"n_devices": self.n_devices}
+
+    def _put_tables(self, linked: LinkedConfig) -> tuple:
+        """The CM image once per device: replicated over the mesh."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        jax, jnp = self._jax, self._jnp
+        rep = NamedSharding(self.mesh, PartitionSpec())
+        return tuple(
+            jax.device_put(jnp.asarray(t, jnp.int32), rep)
+            for t in (linked.scalar, linked.ops, linked.regw))
+
+    def _put_operand(self, arr):
+        return self._jnp.asarray(arr)
+
+    def _traced(self, niter, mem):
+        """``mem`` is one (n_devices * bucket, M) global block; each
+        device's shard runs the same pallas_call at the per-device
+        bucket shape — one trace, every device."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        self.traces += 1
+        rows, M = mem.shape
+        bucket = rows // self.n_devices
+        call = make_cgra_call(self.linked, M=M, bB=bucket, n_tiles=1,
+                              interpret=self.interpret)
+
+        def shard_fn(niter, mem_shard):
+            return call(niter, *self._tables, mem_shard.T).T
+
+        return shard_map(shard_fn, mesh=self.mesh,
+                         in_specs=(P(), P(self.axis, None)),
+                         out_specs=P(self.axis, None),
+                         check_rep=False)(niter, mem)
+
+    # -- the sharded block plan ----------------------------------------------
+    def _capacity(self) -> int:
+        return self.n_devices * self.buckets[-1]
+
+    def _block_rows(self, chunk: int) -> int:
+        per_device = -(-chunk // self.n_devices)      # ceil
+        return self.n_devices * self.bucket_for(per_device)
 
 
 class CompiledKernelCache:
     """The engine registry: one ``KernelEngine`` per
-    ``(lowered fingerprint, lanes, interpret)``, created on first use and
-    kept for the life of the process — the trace-once/run-many cache the
-    pallas backend, ``Executable.warmup`` and the execution service share.
+    ``(lowered fingerprint, lanes, interpret, placement)``, created on
+    first use and kept for the life of the process — the
+    trace-once/run-many cache the pallas backend, ``Executable.warmup``
+    and the execution service share.  Placement distinguishes the default
+    engine, device-pinned replica engines (``device=``) and the sharded
+    multi-device engine (``sharded_engine_for``).
     """
 
     def __init__(self, buckets: Optional[Sequence[int]] = None) -> None:
         self.default_buckets = buckets
-        self._engines: Dict[Tuple[str, int, bool], KernelEngine] = {}
+        self._engines: Dict[Tuple[str, int, bool, Optional[str]],
+                            KernelEngine] = {}
         self._lock = threading.Lock()
+
+    @staticmethod
+    def _placement(device, mesh, sharded: bool) -> Optional[str]:
+        if sharded:
+            if mesh is None:
+                return "sharded:host"
+            return "sharded:" + ",".join(
+                str(d.id) for d in mesh.devices.flat)
+        return None if device is None else f"dev:{device.id}"
 
     def engine_for(self, linked: LinkedConfig, *, lanes: int = 128,
                    interpret: bool = True,
-                   buckets: Optional[Sequence[int]] = None) -> KernelEngine:
-        key = (lowered_fingerprint(linked), lanes, interpret)
+                   buckets: Optional[Sequence[int]] = None,
+                   device=None) -> KernelEngine:
+        key = (lowered_fingerprint(linked), lanes, interpret,
+               self._placement(device, None, False))
         with self._lock:
             eng = self._engines.get(key)
             if eng is None:
                 eng = KernelEngine(linked, lanes=lanes, interpret=interpret,
-                                   buckets=buckets or self.default_buckets)
+                                   buckets=buckets or self.default_buckets,
+                                   device=device)
+                self._engines[key] = eng
+            return eng
+
+    def sharded_engine_for(self, linked: LinkedConfig, *, lanes: int = 128,
+                           interpret: bool = True,
+                           buckets: Optional[Sequence[int]] = None,
+                           mesh=None) -> ShardedKernelEngine:
+        """The multi-device engine for ``linked`` (default mesh: every
+        host device on a 1-D ``data`` axis), cached like ``engine_for``."""
+        key = (lowered_fingerprint(linked), lanes, interpret,
+               self._placement(None, mesh, True))
+        with self._lock:
+            eng = self._engines.get(key)
+            if eng is None:
+                eng = ShardedKernelEngine(
+                    linked, lanes=lanes, interpret=interpret,
+                    buckets=buckets or self.default_buckets, mesh=mesh)
                 self._engines[key] = eng
             return eng
 
     def run(self, linked: LinkedConfig, flats: np.ndarray, n_iters: int, *,
-            lanes: int = 128, interpret: bool = True
+            lanes: int = 128, interpret: bool = True, device=None
             ) -> Tuple[np.ndarray, Dict[str, object]]:
-        eng = self.engine_for(linked, lanes=lanes, interpret=interpret)
+        eng = self.engine_for(linked, lanes=lanes, interpret=interpret,
+                              device=device)
+        return eng.run(flats, n_iters)
+
+    def sharded_run(self, linked: LinkedConfig, flats: np.ndarray,
+                    n_iters: int, *, lanes: int = 128,
+                    interpret: bool = True, mesh=None
+                    ) -> Tuple[np.ndarray, Dict[str, object]]:
+        eng = self.sharded_engine_for(linked, lanes=lanes,
+                                      interpret=interpret, mesh=mesh)
         return eng.run(flats, n_iters)
 
     def warmup(self, linked: LinkedConfig, M: int, *,
                buckets: Optional[Sequence[int]] = None, lanes: int = 128,
-               interpret: bool = True) -> Dict[str, object]:
-        eng = self.engine_for(linked, lanes=lanes, interpret=interpret)
+               interpret: bool = True, device=None) -> Dict[str, object]:
+        eng = self.engine_for(linked, lanes=lanes, interpret=interpret,
+                              device=device)
         return eng.warmup(M, buckets)
 
     def stats(self) -> Dict[str, object]:
@@ -264,8 +447,12 @@ class CompiledKernelCache:
         hit ratio, plus the per-engine breakdown."""
         with self._lock:
             engines = dict(self._engines)
-        per = {f"{fp[:12]}/lanes={lanes}/{'interp' if it else 'tpu'}":
-               e.stats() for (fp, lanes, it), e in engines.items()}
+        per = {}
+        for (fp, lanes, it, placement), e in engines.items():
+            name = f"{fp[:12]}/lanes={lanes}/{'interp' if it else 'tpu'}"
+            if placement is not None:
+                name += f"/{placement}"
+            per[name] = e.stats()
         traces = sum(e["traces"] for e in per.values())
         bucket_calls = sum(sum(e["bucket_calls"].values())
                            for e in per.values())

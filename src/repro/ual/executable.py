@@ -144,16 +144,20 @@ class Executable:
         return out, dict(info)
 
     def _execute_batch(self, mems: Sequence[Dict[str, np.ndarray]],
-                       n_iters: int, backend: Optional[str]
+                       n_iters: int, backend: Optional[str],
+                       **backend_opts: object
                        ) -> Tuple[List[Dict[str, np.ndarray]],
                                   Dict[str, object]]:
         """A batch through a backend; returns (outputs, per-call info with
-        wall time and throughput in samples/s)."""
+        wall time and throughput in samples/s).  ``backend_opts`` are
+        forwarded verbatim (e.g. ``device=`` on backends advertising
+        ``supports_device`` — the replica router's placement path)."""
         be = self._resolve(backend)
         mems = list(mems)
         t0 = time.perf_counter()
         outs, info = be.execute_batch(self.program, self.map_result, mems,
-                                      n_iters, **self._backend_kwargs(be))
+                                      n_iters, **self._backend_kwargs(be),
+                                      **backend_opts)
         wall = time.perf_counter() - t0
         info = dict(info)
         info["wall_s"] = wall
@@ -213,16 +217,19 @@ class Executable:
 
     def run_batch_with_info(self, mems: Sequence[Dict[str, np.ndarray]],
                             n_iters: Optional[int] = None, *,
-                            backend: Optional[str] = None
+                            backend: Optional[str] = None,
+                            **backend_opts: object
                             ) -> Tuple[List[Dict[str, np.ndarray]],
                                        Dict[str, object]]:
         """``run_batch`` for concurrent sharers of one Executable: returns
         ``(outputs, info)`` per call — wall time, batch size and
         ``throughput_sps`` — WITHOUT publishing through ``last_info``, so
         parallel callers (the execution service's workers, ``explore``
-        pools) never read another call's numbers."""
+        pools) never read another call's numbers.  Extra keywords are
+        forwarded to the backend (``device=`` for per-replica placement
+        on backends advertising ``supports_device``)."""
         n = n_iters if n_iters is not None else self.program.n_iters
-        return self._execute_batch(mems, n, backend)
+        return self._execute_batch(mems, n, backend, **backend_opts)
 
     # -- validation -----------------------------------------------------------
     def validate(self, seed: int = 0, n_iters: Optional[int] = None,

@@ -72,6 +72,11 @@ class CompileContext:
     #: whole mapping+lowering, paying exactly one of each), released by
     #: ``Pipeline.run``'s finally
     key_lock: Optional[object] = None
+    #: the cross-PROCESS analogue (``MappingCache.process_lock_key``):
+    #: an fcntl file lock HELD by the cold winner alongside ``key_lock``
+    #: so racing *processes* sharing the disk cache also pay exactly one
+    #: mapping + one lowering per key; released by ``Pipeline.run``
+    process_lock: Optional[object] = None
     check_report: Optional[CheckReport] = None  # the verify pass's findings
     records: List[PassRecord] = field(default_factory=list)
 
@@ -180,6 +185,26 @@ class MappingPass(CompilePass):
             return {"cache": "hit", "inflight": True,
                     "strategy": result.strategy, "II": result.II,
                     "success": result.success}
+        # still cold in this process: take the cross-process file lock
+        # too (None for diskless caches) and peek once more — another
+        # PROCESS may have just published the entry to the shared disk
+        # dir while we waited.  Held through lowering like key_lock, so
+        # a cold tenant pays one mapping + one lowering cluster-wide.
+        plock = c.process_lock_key(key)
+        if plock is not None:
+            plock.acquire()
+            ctx.process_lock = plock     # released by Pipeline.run
+            result = c.peek(key)
+            if result is not None:
+                ctx.process_lock = ctx.key_lock = None
+                plock.release()
+                lock.release()
+                ctx.result = result
+                ctx.cache_hit = True
+                return {"cache": "hit", "inflight": True,
+                        "cross_process": True,
+                        "strategy": result.strategy, "II": result.II,
+                        "success": result.success}
         result = _map()
         ctx.restarts_paid = result.restarts
         c.put(key, result, memory_only=not result.success)
@@ -319,9 +344,12 @@ class Pipeline:
                 ctx.records.append(
                     PassRecord(p.name, time.perf_counter() - t0, stats or {}))
         finally:
-            # the cold winner's per-key compile lock (see CompileContext
-            # .key_lock) is released here even when a pass raises or a
-            # custom pipeline omits the lowering pass
+            # the cold winner's per-key compile locks (see CompileContext
+            # .key_lock / .process_lock) are released here even when a
+            # pass raises or a custom pipeline omits the lowering pass
+            if ctx.process_lock is not None:
+                plock, ctx.process_lock = ctx.process_lock, None
+                plock.release()
             if ctx.key_lock is not None:
                 lock, ctx.key_lock = ctx.key_lock, None
                 lock.release()

@@ -68,6 +68,27 @@ class Coalescer:
                 del self._groups[key]
         return out
 
+    def steal_oldest(self, now: float,
+                     min_age_s: float = 0.0) -> Optional[List[Request]]:
+        """Pop the earliest-due partial bucket whose oldest member has
+        aged at least ``min_age_s`` — the dispatcher calls this when a
+        replica is IDLE (``Router.idle_slots``): a waiting bucket trades
+        its remaining chance of company for immediate execution on
+        capacity that would otherwise do nothing.  ``min_age_s`` damps
+        thrash: a brand-new bucket under a briefly-idle pool still gets
+        a moment to coalesce.  Returns None when nothing qualifies."""
+        best_key = None
+        best_due = None
+        for key, group in self._groups.items():
+            if now - group[0].t_submit < min_age_s:
+                continue
+            due = self._due(group)
+            if best_due is None or due < best_due:
+                best_key, best_due = key, due
+        if best_key is None:
+            return None
+        return self._groups.pop(best_key)
+
     def flush_all(self) -> List[List[Request]]:
         """Everything pending, regardless of size or age (shutdown)."""
         out = list(self._groups.values())

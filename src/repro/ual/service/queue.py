@@ -59,13 +59,15 @@ class Response:
     achieved micro-batch size, ``throughput_sps`` of the sweep).
     """
 
-    __slots__ = ("_event", "_out", "_exc", "info")
+    __slots__ = ("_event", "_out", "_exc", "info", "_cb_lock", "_callbacks")
 
     def __init__(self) -> None:
         self._event = threading.Event()
         self._out: Optional[Dict[str, np.ndarray]] = None
         self._exc: Optional[BaseException] = None
         self.info: Dict[str, object] = {}
+        self._cb_lock = threading.Lock()
+        self._callbacks: List = []
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -95,6 +97,20 @@ class Response:
             raise self._exc
         return self._out
 
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` once this response resolves — immediately if
+        it already has.  Callbacks fire on the resolving thread (or the
+        caller's, for an already-done response), so keep them short; the
+        cluster front-end's workers use this to forward results without
+        one blocked thread per in-flight request.  Registration and
+        resolution are serialized under a lock, so a callback is invoked
+        exactly once however the two race."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
     # -- resolution (service-side) -------------------------------------------
     def _resolve(self, out: Optional[Dict[str, np.ndarray]] = None,
                  exc: Optional[BaseException] = None,
@@ -102,7 +118,11 @@ class Response:
         self.info.update(info)
         self._out = out
         self._exc = exc
-        self._event.set()
+        with self._cb_lock:
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
 
 
 @dataclass

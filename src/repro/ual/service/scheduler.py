@@ -28,11 +28,12 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.analysis.verifier import VerifyError
+from repro.ual.backends import get_backend
 from repro.ual.cache import MappingCache, default_cache
 from repro.ual.compiler import compile as ual_compile
 from repro.ual.engine import default_engine
@@ -65,25 +66,57 @@ class Service:
     instead of growing memory.  Deadlines (per request, per tenant via
     ``deadlines_ms``, or service-wide via ``default_deadline_ms``) drop
     requests that aged out before execution (``deadline-exceeded``).
+
+    **Replicated mode** (``replicas > 1`` or ``devices=...``): worker
+    threads become ``ReplicaSlot``s behind a ``Router``
+    (``repro.ual.cluster.replica``) — flush-ready micro-batches go to
+    the least-loaded slot (class-affinity tiebreak), an idle slot steals
+    the oldest batch from the most-loaded sibling, and the dispatcher
+    additionally flushes a *partial* coalescer bucket early when a
+    replica idles (after ``max_wait_ms / 4`` of bucket age — batching
+    only pays while capacity is busy).  ``devices`` pins slot ``i`` to
+    ``devices[i]``; backends advertising ``supports_device`` (pallas)
+    then execute each slot's sweeps on its own device through
+    device-pinned engines.  ``workers`` is superseded by ``replicas`` in
+    this mode (one thread per slot).  ``stats()["router"]`` reports
+    per-replica samples/s, routing decisions and steal counts.
     """
 
     def __init__(self, max_batch: int = 32, max_wait_ms: float = 2.0,
                  max_queue: int = 1024, workers: int = 1,
+                 replicas: int = 1, devices: Optional[Sequence] = None,
                  cache: Optional[MappingCache] = None,
                  default_deadline_ms: Optional[float] = None,
                  deadlines_ms: Optional[Dict[str, float]] = None,
+                 warmup_buckets: Optional[Sequence[int]] = None,
                  start: bool = True) -> None:
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if devices is not None and replicas == 1:
+            replicas = len(list(devices))
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.max_queue = max_queue
-        self.n_workers = workers
+        self.replicas = replicas
         self.default_deadline_ms = default_deadline_ms
         self.deadlines_ms = dict(deadlines_ms or {})
+        self.warmup_buckets = warmup_buckets
         self._cache = cache
+
+        if replicas > 1 or devices is not None:
+            from repro.ual.cluster.replica import Router
+            self._router: Optional[object] = Router(replicas,
+                                                    devices=devices)
+            self.n_workers = replicas       # one thread per slot
+        else:
+            self._router = None
+            self.n_workers = workers
+        #: minimum bucket age before idle capacity may flush it early
+        self._steal_age_s = (max_wait_ms / 1e3) * 0.25
 
         self._admission = AdmissionQueue()
         self._coalescer = Coalescer(max_batch, max_wait_ms / 1e3)
@@ -113,7 +146,7 @@ class Service:
             d.start()
             self._threads.append(d)
             for i in range(self.n_workers):
-                w = threading.Thread(target=self._worker_loop,
+                w = threading.Thread(target=self._worker_loop, args=(i,),
                                      name=f"ual-service-worker-{i}",
                                      daemon=True)
                 w.start()
@@ -201,38 +234,78 @@ class Service:
         return req.response
 
     # -- dispatcher -----------------------------------------------------------
+    def _emit(self, batch: List[Request], *, early: bool = False) -> None:
+        """Hand one flush-ready micro-batch to the execution side: the
+        shared FIFO in plain mode, the Router in replicated mode."""
+        if self._router is None:
+            self._batches.put(batch)
+        else:
+            self._router.route(batch[0].key, batch, early=early)
+
+    def _steal_for_idle(self, now: float) -> None:
+        """Replicated mode: while there is strictly more idle capacity
+        than routed-but-unclaimed work, flush the oldest sufficiently-
+        aged partial bucket early — an idle replica beats a fuller
+        batch (work stealing between coalescer buckets)."""
+        while self._router.idle_slots() > self._router.queued():
+            batch = self._coalescer.steal_oldest(now, self._steal_age_s)
+            if batch is None:
+                return
+            self._emit(batch, early=True)
+
     def _dispatch_loop(self) -> None:
         while True:
             now = time.perf_counter()
             for batch in self._coalescer.pop_expired(now):
-                self._batches.put(batch)
+                self._emit(batch)
+            if self._router is not None:
+                self._steal_for_idle(time.perf_counter())
             wait = self._coalescer.next_deadline(time.perf_counter())
             timeout = _IDLE_TICK_S if wait is None else max(wait, 1e-4)
+            if self._router is not None and wait is not None:
+                # wake early enough to notice an idle replica while a
+                # partial bucket is still young (steal granularity)
+                timeout = max(min(timeout, max(self._steal_age_s / 2,
+                                               1e-3)), 1e-4)
             item = self._admission.get(timeout=timeout)
             if item is _STOP:
                 break
             if item is not None:
                 full = self._coalescer.offer(item)
                 if full is not None:
-                    self._batches.put(full)
+                    self._emit(full)
         # drain: late racers in admission, then every partial bucket
         for item in self._admission.drain():
             if item is not _STOP:
                 full = self._coalescer.offer(item)
                 if full is not None:
-                    self._batches.put(full)
+                    self._emit(full)
         for batch in self._coalescer.flush_all():
-            self._batches.put(batch)
-        for _ in range(self.n_workers):
-            self._batches.put(_STOP)
+            self._emit(batch)
+        if self._router is None:
+            for _ in range(self.n_workers):
+                self._batches.put(_STOP)
+        else:
+            self._router.stop()     # pulls drain the queues, then None
 
     # -- workers --------------------------------------------------------------
-    def _worker_loop(self) -> None:
+    def _worker_loop(self, index: int = 0) -> None:
+        if self._router is None:
+            while True:
+                batch = self._batches.get()
+                if batch is _STOP:
+                    break
+                self._run_batch(batch)
+            return
+        slot = self._router.slots[index]
         while True:
-            batch = self._batches.get()
-            if batch is _STOP:
+            item = self._router.pull(index)
+            if item is None:
                 break
-            self._run_batch(batch)
+            _key, batch, _stolen = item
+            t0 = time.perf_counter()
+            n_live = self._run_batch(batch, slot=slot)
+            self._router.done(index, n_live, time.perf_counter() - t0)
 
     def _executable(self, req: Request) -> Executable:
         """The shared warm Executable for a batch key, compiled through
@@ -255,13 +328,16 @@ class Service:
                 installed = self._exes.setdefault(key, exe)
             if installed is exe and exe.success:
                 try:
-                    exe.warmup()
+                    exe.warmup(self.warmup_buckets)
                 except Exception:
                     pass     # warming is an optimization, never a failure
             exe = installed
         return exe
 
-    def _run_batch(self, batch: List[Request]) -> None:
+    def _run_batch(self, batch: List[Request], slot=None) -> int:
+        """Execute one micro-batch; returns how many requests actually
+        rode the sweep (0 when every member was rejected first) so the
+        router's per-replica sample counters stay honest."""
         with self._lock:
             self._pending -= len(batch)
         now = time.perf_counter()
@@ -274,7 +350,7 @@ class Service:
             else:
                 live.append(req)
         if not live:
-            return
+            return 0
         try:
             try:
                 exe = self._executable(live[0])
@@ -285,21 +361,26 @@ class Service:
                 for req in live:
                     self._finish_rejected(req, "verifier-error",
                                           exc.report.summary())
-                return
+                return 0
             if not exe.success:
                 for req in live:
                     self._finish_rejected(
                         req, "compile-failed",
                         f"{req.program.name} does not map onto "
                         f"{req.target.fabric.name}")
-                return
+                return 0
+            kw: Dict[str, object] = {}
+            if slot is not None and slot.device is not None:
+                be = get_backend(live[0].target.backend)
+                if getattr(be, "supports_device", False):
+                    kw["device"] = slot.device    # per-replica placement
             outs, info = exe.run_batch_with_info(
-                [req.mem for req in live], n_iters=live[0].n_iters)
+                [req.mem for req in live], n_iters=live[0].n_iters, **kw)
         except Exception as exc:     # resolve, don't kill the worker
             self._metrics.record_error(len(live))
             for req in live:
                 req.response._resolve(exc=exc)
-            return
+            return len(live)
         done = time.perf_counter()
         self._metrics.record_batch(len(live), float(info.get("wall_s", 0.0)))
         sps = info.get("throughput_sps")
@@ -308,6 +389,7 @@ class Service:
             self._metrics.record_completed(req.tenant, latency)
             req.response._resolve(out, latency_ms=round(latency * 1e3, 3),
                                   batch=len(live), throughput_sps=sps)
+        return len(live)
 
     # -- observability --------------------------------------------------------
     def stats(self) -> Dict[str, object]:
@@ -324,4 +406,6 @@ class Service:
         cache = self._cache if self._cache is not None else default_cache()
         snap["cache"] = cache.stats()
         snap["engine"] = default_engine().stats()
+        if self._router is not None:
+            snap["router"] = self._router.stats()
         return snap
