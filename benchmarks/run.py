@@ -11,7 +11,9 @@ registered temporal fabric through the UAL, cache-cold then cache-warm,
 runs a B=16 batched-sim throughput check off the shared lowered artifact
 (oracle parity + nonzero samples/s), a pallas JIT-engine gate (mixed-size
 batches through the persistent engine: oracle parity spot-check, trace
-count == bucket count), a 2-fabric x 2-strategy mini-sweep through
+count == bucket count, plus a chunked streaming run on the warm engine —
+parity, populated overlap metrics, zero new traces, recorded in
+``smoke.json["stream"]``), a 2-fabric x 2-strategy mini-sweep through
 ``compile_many(workers=2)``, a dynamic-batching service gate
 (32 requests through a ``max_batch=8`` ``ual.Service``, oracle parity
 spot-checked, nonzero samples/s), and a 2-process mini cluster gate
@@ -30,8 +32,9 @@ import time
 
 from benchmarks import (bench_dse, bench_exec, bench_fig9_spatial_vs_st,
                         bench_fig10_voltage, bench_fig11_breakdown,
-                        bench_roofline, bench_serve, bench_table2_validation,
-                        bench_table3_multihop, bench_table4_efficiency)
+                        bench_roofline, bench_serve, bench_stream,
+                        bench_table2_validation, bench_table3_multihop,
+                        bench_table4_efficiency)
 from benchmarks.common import fmt_table, save
 
 BENCHES = {
@@ -46,6 +49,7 @@ BENCHES = {
     "exec_throughput": bench_exec.run,
     "serve_throughput": bench_serve.run,
     "serve_scaling": bench_serve.run_cluster,
+    "stream_throughput": bench_stream.run,
 }
 
 SMOKE_TARGETS = (
@@ -300,6 +304,7 @@ def smoke() -> int:
     # Runs LAST: this is the smoke's first jax use, and the fork-based
     # mini-sweep above must spawn its workers before jax starts threads
     engine_json = None
+    stream_json = None
     with tempfile.TemporaryDirectory() as d:
         from repro.core.dfg import interpret
         ecache = ual.MappingCache(disk_dir=d)
@@ -341,6 +346,44 @@ def smoke() -> int:
                       f"batches: {stats['traces']} traces / "
                       f"{n_buckets} buckets, "
                       f"parity={'ok' if parity else 'FAIL'} ==")
+
+                # -- streaming gate: a small chunked run through the
+                # double-buffered path on the SAME warm engine — parity
+                # spot-check, overlap metrics populated, zero new traces
+                traces_before = engine.stats()["traces"]
+                s_outs = exe.run_batch(mems, stream=True, chunk=8)
+                s_info = exe.last_info
+                s_parity = all(
+                    np.array_equal(interpret(program.dfg, m,
+                                             program.n_iters)[n], o[n])
+                    for m, o in ((mems[0], s_outs[0]),
+                                 (mems[11], s_outs[11]))
+                    for n in program.outputs)
+                s_traces = engine.stats()["traces"] - traces_before
+                if not s_parity:
+                    failures.append("stream: oracle parity mismatch")
+                if not (s_info.get("stream_chunks", 0) > 0
+                        and s_info.get("throughput_sps", 0) > 0):
+                    failures.append("stream: overlap metrics missing "
+                                    f"({s_info})")
+                if s_info.get("overlap_frac") is None:
+                    failures.append("stream: no overlap_frac reported")
+                if s_traces != 0:
+                    failures.append(f"stream: {s_traces} new traces on a "
+                                    f"warm engine")
+                stream_json = {"B": len(mems), "chunk": 8,
+                               "parity": s_parity,
+                               "stream_chunks":
+                                   s_info.get("stream_chunks"),
+                               "overlap_frac": s_info.get("overlap_frac"),
+                               "throughput_sps":
+                                   round(float(s_info.get(
+                                       "throughput_sps", 0.0)), 1),
+                               "new_traces": s_traces}
+                print(f"== smoke: streaming B={len(mems)} chunk=8: "
+                      f"{stream_json['stream_chunks']} chunks, overlap "
+                      f"{stream_json['overlap_frac']}, {s_traces} new "
+                      f"traces, parity={'ok' if s_parity else 'FAIL'} ==")
         finally:
             ual.set_default_engine(prev_engine)
 
@@ -348,6 +391,7 @@ def smoke() -> int:
                    "sweep": sweep_json,
                    "batched_sim": batched_json, "pallas_engine": engine_json,
                    "service": service_json, "cluster": cluster_json,
+                   "stream": stream_json,
                    "failures": failures})
     for f in failures:
         print(f"FAIL {f}")

@@ -52,7 +52,9 @@ Vocabulary:
     ``submit`` returns a ``Response`` future, overload and expired
     deadlines come back as ``ServiceRejected`` verdicts, and
     ``Service.stats()`` reports p50/p99 latency, achieved batch size,
-    samples/s, queue depth and rejects.
+    samples/s, queue depth and rejects; ``submit_stream`` is the bulk
+    path — one chunked request pipelined through a warm trace
+    (``StreamResponse``), stream stats under ``stats()["stream"]``.
 
 Extension points, all the same shape (named registry, duplicate names
 raise without ``overwrite=True``): ``register_backend``
@@ -82,7 +84,8 @@ from repro.ual.explore import (DesignPoint, ExploreReport, compile_many,
 from repro.ual.pipeline import (CompileContext, CompilePass, Pipeline,
                                 VerifyPass, default_pipeline)
 from repro.ual.program import Program
-from repro.ual.service import Response, Service, ServiceRejected
+from repro.ual.service import (Response, Service, ServiceRejected,
+                               StreamResponse)
 from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 
 __all__ = [
@@ -92,8 +95,8 @@ __all__ = [
     "Executable", "ExploreReport", "FABRICS", "KernelEngine",
     "LinkedConfig", "MapperStrategy", "MappingCache", "PassRecord",
     "Pipeline", "Program", "Response", "Router", "Service",
-    "ServiceRejected", "ShardedKernelEngine", "Target", "VerifyError",
-    "VerifyPass",
+    "ServiceRejected", "ShardedKernelEngine", "StreamResponse", "Target",
+    "VerifyError", "VerifyPass",
     "bucket_ladder", "compile", "compile_many", "default_cache",
     "default_cache_dir", "default_engine", "default_pipeline", "explore",
     "get_backend", "link_config", "list_backends", "list_fabrics",

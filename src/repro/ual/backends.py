@@ -25,7 +25,7 @@ Third parties extend the layer with ``register_backend("mine", MyBackend())``
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -54,6 +54,11 @@ class Backend:
     #: serving cluster's replica router uses this to run per-device
     #: replicas; leave False to never receive the keyword
     supports_device: bool = False
+    #: natively-batched backends that can skip re-flattening when the
+    #: caller already holds the (B, total_words) image accept a
+    #: ``flats=`` keyword in ``execute_batch`` — ``Executable.validate``
+    #: uses this to flatten its test vectors ONCE per multi-backend sweep
+    accepts_flats: bool = False
 
     def execute(self, program: Program, result: Optional[MapResult],
                 mem: Mem, n_iters: int, **kw) -> Tuple[Mem, Info]:
@@ -68,6 +73,43 @@ class Backend:
             out, info = self.execute(program, result, m, n_iters, **kw)
             outs.append(out)
         return outs, info
+
+    def execute_stream(self, program: Program, result: Optional[MapResult],
+                       mems: Iterable[Mem], n_iters: int, *,
+                       chunk: Optional[int] = None, **kw
+                       ) -> Iterator[Tuple[List[Mem], Info]]:
+        """Streaming execution: yield ``(out_dicts, chunk_info)`` per
+        chunk of ``chunk`` samples as results drain; the generator's
+        return value is the stream summary (must carry ``overlap_frac``
+        and ``stream_chunks``).
+
+        This default chunks the input through ``execute_batch`` — chunked
+        delivery, but NO transfer/compute overlap (``overlap_frac`` 0.0).
+        Backends with an asynchronous device path (pallas) override it
+        with a genuinely pipelined implementation.
+        """
+        step = max(1, int(chunk) if chunk else 32)
+        n_chunks = 0
+        n_samples = 0
+        group: List[Mem] = []
+        for m in mems:
+            group.append(m)
+            if len(group) >= step:
+                outs, info = self.execute_batch(program, result, group,
+                                                n_iters, **kw)
+                yield outs, {"chunk": n_chunks, "samples": len(outs),
+                             **info}
+                n_chunks += 1
+                n_samples += len(outs)
+                group = []
+        if group:
+            outs, info = self.execute_batch(program, result, group,
+                                            n_iters, **kw)
+            yield outs, {"chunk": n_chunks, "samples": len(outs), **info}
+            n_chunks += 1
+            n_samples += len(outs)
+        return {"stream_chunks": n_chunks, "samples": n_samples,
+                "overlap_frac": 0.0, "streamed": "chunked-sync"}
 
 
 class InterpBackend(Backend):
@@ -99,6 +141,7 @@ class SimBackend(Backend):
     """
 
     consumes_lowered = True
+    accepts_flats = True
 
     def execute(self, program, result, mem, n_iters, lowered=None):
         from repro.core.simulator import simulate_batch
@@ -108,9 +151,11 @@ class SimBackend(Backend):
         return program.unflatten(out[0]), {"sim_stats": stats,
                                            "engine": "vectorized"}
 
-    def execute_batch(self, program, result, mems, n_iters, lowered=None):
+    def execute_batch(self, program, result, mems, n_iters, lowered=None,
+                      flats=None):
         from repro.core.simulator import simulate_batch
-        flats = program.flatten_batch(mems)
+        if flats is None:
+            flats = program.flatten_batch(mems)
         outs, stats = simulate_batch(_ensure_lowered(result, lowered),
                                      flats, n_iters)
         return (program.unflatten_batch(outs),
@@ -137,6 +182,7 @@ class PallasBackend(Backend):
     """
 
     consumes_lowered = True
+    accepts_flats = True
 
     def __init__(self, lanes: int = 128, interpret: bool = True,
                  engine=None, sharded: bool = False):
@@ -161,9 +207,20 @@ class PallasBackend(Backend):
                                         lowered=lowered, device=device)
         return outs[0], info
 
+    def _engine_for(self, linked, device=None):
+        """The (cached) engine executing ``linked`` under this backend's
+        opts — sharded or single-device, per the registration."""
+        if self.sharded:
+            return self.engine.sharded_engine_for(linked, lanes=self.lanes,
+                                                  interpret=self.interpret)
+        return self.engine.engine_for(linked, lanes=self.lanes,
+                                      interpret=self.interpret,
+                                      device=device)
+
     def execute_batch(self, program, result, mems, n_iters, lowered=None,
-                      device=None):
-        flats = program.flatten_batch(mems)
+                      device=None, flats=None):
+        if flats is None:
+            flats = program.flatten_batch(mems)
         linked = _ensure_lowered(result, lowered)
         if self.sharded:
             out, info = self.engine.sharded_run(linked, flats, n_iters,
@@ -177,19 +234,46 @@ class PallasBackend(Backend):
         info["batched"] = True
         return program.unflatten_batch(out), info
 
+    def execute_stream(self, program, result, mems, n_iters, *,
+                       chunk=None, lowered=None, device=None):
+        """Genuinely pipelined streaming: chunks flow through the
+        persistent engine's double-buffered ``run_stream`` — while chunk
+        *i* computes on device, the host flattens/uploads chunk *i+1*
+        and unflattens chunk *i-1*'s drained rows.  Same bucket-ladder
+        traces as ``execute_batch``; the summary carries the engine's
+        measured ``overlap_frac``."""
+        linked = _ensure_lowered(result, lowered)
+        eng = self._engine_for(linked, device=device)
+        step = (max(1, min(int(chunk), eng._capacity())) if chunk
+                else eng._capacity())
+
+        def blocks():
+            group = []
+            for m in mems:
+                group.append(m)
+                if len(group) >= step:
+                    yield program.flatten_batch(group)
+                    group = []
+            if group:
+                yield program.flatten_batch(group)
+
+        gen = eng.run_stream(blocks(), n_iters, chunk=step)
+        while True:
+            try:
+                out, cinfo = next(gen)
+            except StopIteration as stop:
+                summary = dict(stop.value or {})
+                summary["batched"] = True
+                return summary
+            yield program.unflatten_batch(out), cinfo
+
     def warmup(self, program, result, lowered=None, buckets=None,
                device=None):
         """Pre-trace the bucket ladder for this program's scratchpad width
         (``n_iters`` is traced, so one trace per bucket covers every trip
         count).  Returns the engine's stats."""
         linked = _ensure_lowered(result, lowered)
-        if self.sharded:
-            eng = self.engine.sharded_engine_for(linked, lanes=self.lanes,
-                                                 interpret=self.interpret)
-        else:
-            eng = self.engine.engine_for(linked, lanes=self.lanes,
-                                         interpret=self.interpret,
-                                         device=device)
+        eng = self._engine_for(linked, device=device)
         return eng.warmup(program.layout.total_words, buckets)
 
 

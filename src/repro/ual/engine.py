@@ -24,9 +24,22 @@ times.  This module is that half of the story:
     batches beyond the largest bucket run as warm largest-bucket chunks —
     the trace count stays O(#buckets) no matter how traffic is shaped.
 
-Observability: every engine counts traces, calls, per-bucket hits and
-padding waste; ``CompiledKernelCache.stats()`` aggregates them (the
-execution service surfaces this in ``Service.stats()["engine"]``, and
+Streaming (the STRELA mode — data flows through a resident config):
+``run`` is upload -> sweep -> download in strict sequence, so on large
+batches the host<->device transfer time is dead time.  ``run_stream``
+instead pipelines warm-bucket chunks with **double buffering**: jax
+dispatch is asynchronous, so while chunk *i* computes on device the
+host pads/uploads chunk *i+1* and converts chunk *i-1*'s drained
+results — the same bucket-ladder traces (zero new traces), with the
+transfer work overlapped against compute.  Chunks are yielded as they
+drain; the generator's return value reports ``overlap_frac`` (fraction
+of wall time the host spent working instead of blocked on the device),
+``stream_chunks`` and throughput.
+
+Observability: every engine counts traces, calls, per-bucket hits,
+padding waste and streaming activity (``streams``/``stream_chunks``);
+``CompiledKernelCache.stats()`` aggregates them (the execution service
+surfaces this in ``Service.stats()["engine"]``, and
 ``Executable.warmup()`` reports it in ``last_info``).
 
 Multi-device (the serving-cluster substrate, ``repro.ual.cluster``):
@@ -47,7 +60,10 @@ Multi-device (the serving-cluster substrate, ``repro.ual.cluster``):
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from collections import deque
+from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -122,6 +138,8 @@ class KernelEngine:
         self.calls = 0
         self.samples = 0
         self.padded_samples = 0
+        self.streams = 0             # run_stream invocations completed
+        self.stream_chunks = 0       # chunks drained across all streams
         self.bucket_calls: Dict[int, int] = {}
         self._warm: set = set()              # (M, bucket) already traced
         self._trace_lock = threading.Lock()
@@ -204,23 +222,30 @@ class KernelEngine:
         B, M = flats.shape
         niter = self._put_operand(
             jnp.asarray(n_iters, jnp.int32).reshape(1, 1))
-        out = np.empty((B, M), np.int32)
         used: List[int] = []
         cold_blocks = 0
         top = self._capacity()
-        i = 0
-        while i < B:
-            chunk = min(B - i, top)
-            rows = self._block_rows(chunk)
-            block = flats[i:i + chunk]
-            if rows != chunk:
-                block = np.concatenate(
-                    [block, np.zeros((rows - chunk, M), np.int32)])
-            block_out, was_cold = self._call_block(block, niter)
-            out[i:i + chunk] = block_out[:chunk]
-            cold_blocks += was_cold
-            used.append(rows)
-            i += chunk
+        if B <= top and self._block_rows(B) == B:
+            # pad-free fast path: the batch IS a bucket — no padding
+            # rows to append, no staging buffer to copy through
+            out, was_cold = self._call_block(flats, niter)
+            cold_blocks = int(was_cold)
+            used.append(B)
+        else:
+            out = np.empty((B, M), np.int32)
+            i = 0
+            while i < B:
+                chunk = min(B - i, top)
+                rows = self._block_rows(chunk)
+                block = flats[i:i + chunk]
+                if rows != chunk:
+                    block = np.concatenate(
+                        [block, np.zeros((rows - chunk, M), np.int32)])
+                block_out, was_cold = self._call_block(block, niter)
+                out[i:i + chunk] = block_out[:chunk]
+                cold_blocks += was_cold
+                used.append(rows)
+                i += chunk
         with self._stats_lock:
             for rows in used:
                 self.bucket_calls[rows] = \
@@ -238,6 +263,127 @@ class KernelEngine:
             **self._info_extra(),
         }
         return out, info
+
+    # -- streaming ------------------------------------------------------------
+    def _dispatch_block(self, block: np.ndarray, niter
+                        ) -> Tuple[object, bool]:
+        """Asynchronously dispatch one padded block; returns the device
+        future WITHOUT materializing it.  Warm shapes return immediately
+        (jax async dispatch); cold shapes trace synchronously under the
+        trace lock — a cold trace takes seconds and must not sit in the
+        pipeline as if it were a 1 ms hop."""
+        key = (block.shape[1], block.shape[0])
+        with self._stats_lock:
+            warm = key in self._warm
+        if warm:
+            return self._fn(niter, self._put_operand(block)), False
+        with self._trace_lock:
+            fut = self._fn(niter, self._put_operand(block))
+            fut.block_until_ready()
+            with self._stats_lock:
+                self._warm.add(key)
+        return fut, True
+
+    def run_stream(self, source: Union[np.ndarray, Iterable[np.ndarray]],
+                   n_iters: int, *, chunk: Optional[int] = None,
+                   depth: int = 2
+                   ) -> Iterator[Tuple[np.ndarray, Dict[str, object]]]:
+        """Streaming execution: pipeline warm-bucket chunks with double
+        buffering, yielding ``(out_chunk (b, M), chunk_info)`` as each
+        chunk drains.
+
+        ``source`` is a (B, M) batch or an iterable of (b, M) row blocks
+        (blocks larger than ``chunk`` are re-chunked).  While chunk *i*
+        computes on device, the host pads/uploads chunk *i+1* and
+        converts chunk *i-1*'s results — jax async dispatch keeps up to
+        ``depth`` chunks in flight, so host<->device transfer work
+        overlaps compute instead of serializing with it (``run``'s
+        upload -> sweep -> download).  Chunks ride the same bucket-ladder
+        traces as ``run``: a warmed engine streams with ZERO new traces.
+
+        The generator's return value (``StopIteration.value``) is the
+        stream summary: ``stream_chunks``, ``samples``, ``wall_s``,
+        ``throughput_sps``, ``wait_s`` (host time blocked on the device)
+        and ``overlap_frac`` = 1 - wait/wall — the fraction of the wall
+        the host spent preparing/draining other chunks while the device
+        worked.  A fully serialized pipeline (or an empty stream)
+        reports 0.0.
+        """
+        jnp = self._jnp
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        top = self._capacity()
+        step = top if chunk is None else max(1, min(int(chunk), top))
+        niter = self._put_operand(
+            jnp.asarray(n_iters, jnp.int32).reshape(1, 1))
+
+        def blocks() -> Iterator[np.ndarray]:
+            blks = [source] if isinstance(source, np.ndarray) else source
+            for blk in blks:
+                blk = np.ascontiguousarray(blk, np.int32)
+                for i in range(0, len(blk), step):
+                    yield blk[i:i + step]
+
+        t_start = time.perf_counter()
+        wait_s = 0.0
+        used: List[int] = []
+        cold_blocks = 0
+        n_samples = 0
+        n_chunks = 0
+        inflight: deque = deque()      # (future, b, rows, was_cold)
+
+        def drain() -> Tuple[np.ndarray, Dict[str, object]]:
+            nonlocal wait_s, cold_blocks, n_samples, n_chunks
+            fut, b, rows, was_cold = inflight.popleft()
+            t0 = time.perf_counter()
+            fut.block_until_ready()
+            wait_s += time.perf_counter() - t0
+            out = np.asarray(fut)[:b]
+            cold_blocks += was_cold
+            used.append(rows)
+            n_samples += b
+            n_chunks += 1
+            return out, {"chunk": n_chunks - 1, "bucket": rows,
+                         "samples": b, "traced": int(was_cold)}
+
+        for blk in blocks():
+            b = blk.shape[0]
+            rows = self._block_rows(b)
+            if rows != b:
+                blk = np.concatenate(
+                    [blk, np.zeros((rows - b, blk.shape[1]), np.int32)])
+            fut, was_cold = self._dispatch_block(blk, niter)
+            inflight.append((fut, b, rows, was_cold))
+            while len(inflight) > depth:
+                yield drain()
+        while inflight:
+            yield drain()
+
+        wall = time.perf_counter() - t_start
+        with self._stats_lock:
+            for rows in used:
+                self.bucket_calls[rows] = self.bucket_calls.get(rows, 0) + 1
+            self.padded_samples += sum(used) - n_samples
+            self.calls += 1
+            self.samples += n_samples
+            self.streams += 1
+            self.stream_chunks += n_chunks
+            traces_total = self.traces
+        return {
+            "engine": self.ENGINE_NAME,
+            "stream_chunks": n_chunks,
+            "samples": n_samples,
+            "buckets": used,
+            "padded": sum(used) - n_samples,
+            "traced": cold_blocks,
+            "traces_total": traces_total,
+            "wall_s": wall,
+            "wait_s": wait_s,
+            "overlap_frac": (round(max(0.0, 1.0 - wait_s / wall), 4)
+                             if wall > 0 and n_chunks else 0.0),
+            "throughput_sps": n_samples / wall if wall > 0 else 0.0,
+            **self._info_extra(),
+        }
 
     def warmup(self, M: int,
                buckets: Optional[Sequence[int]] = None) -> Dict[str, object]:
@@ -265,6 +411,8 @@ class KernelEngine:
                 "calls": self.calls,
                 "samples": self.samples,
                 "padded_samples": self.padded_samples,
+                "streams": self.streams,
+                "stream_chunks": self.stream_chunks,
                 "warm_shapes": sorted(self._warm),
             }
         calls = sum(bucket_calls.values())
@@ -435,6 +583,17 @@ class CompiledKernelCache:
                                       interpret=interpret, mesh=mesh)
         return eng.run(flats, n_iters)
 
+    def run_stream(self, linked: LinkedConfig, source, n_iters: int, *,
+                   chunk: Optional[int] = None, depth: int = 2,
+                   lanes: int = 128, interpret: bool = True, device=None
+                   ) -> Iterator[Tuple[np.ndarray, Dict[str, object]]]:
+        """Streaming execution through the cached engine for ``linked``
+        (see ``KernelEngine.run_stream``); yields drained chunks, returns
+        the stream summary via ``StopIteration.value``."""
+        eng = self.engine_for(linked, lanes=lanes, interpret=interpret,
+                              device=device)
+        return eng.run_stream(source, n_iters, chunk=chunk, depth=depth)
+
     def warmup(self, linked: LinkedConfig, M: int, *,
                buckets: Optional[Sequence[int]] = None, lanes: int = 128,
                interpret: bool = True, device=None) -> Dict[str, object]:
@@ -463,6 +622,8 @@ class CompiledKernelCache:
             "calls": sum(e["calls"] for e in per.values()),
             "samples": sum(e["samples"] for e in per.values()),
             "padded_samples": sum(e["padded_samples"] for e in per.values()),
+            "streams": sum(e["streams"] for e in per.values()),
+            "stream_chunks": sum(e["stream_chunks"] for e in per.values()),
             "hit_ratio": round(hits / bucket_calls, 4) if bucket_calls
             else None,
             "per_engine": per,

@@ -13,6 +13,19 @@ registered backend with automatic flatten/unflatten of the named arrays:
     exe.last_info["throughput_sps"]          # samples/s of that call
     report = exe.validate(seed=0)            # vs the DFG-interpreter oracle
 
+    for chunk in exe.run_stream(mems):       # streaming: chunks drain as
+        consume(chunk)                       # later chunks still compute
+    exe.last_info["overlap_frac"]            # transfer/compute overlap
+
+Streaming (``run_stream`` / ``run_batch(stream=True)``) pipelines the
+batch through the backend in warm-bucket chunks — on the pallas backend
+chunk *i* computes on device while *i+1* uploads and *i-1* drains
+(double buffering over jax async dispatch); other backends fall back to
+chunked synchronous delivery.  The stream summary (``stream_chunks``,
+``overlap_frac``, ``throughput_sps``) lands in ``last_info`` at
+exhaustion and is also the generator's return value
+(``StopIteration.value``) for concurrent sharers.
+
 Execution info (engine stats, throughput) is *returned per call*
 internally; ``last_info`` is only a convenience copy of the most recent
 call's info, so one Executable can be shared across threads or worker
@@ -165,6 +178,37 @@ class Executable:
         info["throughput_sps"] = len(mems) / wall if wall > 0 else float("inf")
         return outs, info
 
+    def _execute_stream(self, mems, n_iters: int, backend: Optional[str],
+                        chunk: Optional[int] = None, **backend_opts: object):
+        """A batch through a backend's streaming path; yields
+        ``(out_dicts, chunk_info)`` per drained chunk and *returns* the
+        stream summary (wall time, samples, ``overlap_frac``,
+        ``throughput_sps``) as the generator's value."""
+        be = self._resolve(backend)
+        t0 = time.perf_counter()
+        gen = be.execute_stream(self.program, self.map_result, mems, n_iters,
+                                chunk=chunk, **self._backend_kwargs(be),
+                                **backend_opts)
+        n_samples = 0
+        n_chunks = 0
+        while True:
+            try:
+                outs, cinfo = next(gen)
+            except StopIteration as stop:
+                summary = dict(stop.value or {})
+                break
+            n_samples += len(outs)
+            n_chunks += 1
+            yield outs, cinfo
+        wall = time.perf_counter() - t0
+        summary.setdefault("stream_chunks", n_chunks)
+        summary["stream"] = True
+        summary["wall_s"] = wall
+        summary["batch"] = n_samples
+        summary["throughput_sps"] = (n_samples / wall if wall > 0
+                                     else float("inf"))
+        return summary
+
     def warmup(self, buckets: Optional[Sequence[int]] = None, *,
                backend: Optional[str] = None) -> Dict[str, object]:
         """Pre-trace the execution engine's batch-bucket ladder (pallas:
@@ -203,21 +247,31 @@ class Executable:
 
     def run_batch(self, mems: Sequence[Dict[str, np.ndarray]],
                   n_iters: Optional[int] = None, *,
-                  backend: Optional[str] = None
+                  backend: Optional[str] = None,
+                  stream: bool = False,
+                  chunk: Optional[int] = None
                   ) -> List[Dict[str, np.ndarray]]:
         """Execute a batch of named-array dicts; natively batched on the
         ``sim`` and ``pallas`` backends (one engine sweep for the whole
         batch).  The call's wall time, batch size and throughput
         (``throughput_sps``, samples/s) are recorded in ``last_info``.
+
+        ``stream=True`` runs the batch through the backend's streaming
+        path instead (chunked double buffering on pallas); the results
+        come back as one flat list but ``last_info`` carries the stream
+        summary (``stream_chunks``, ``overlap_frac``).  Use
+        ``run_stream`` to consume chunks as they drain.
         """
-        n = n_iters if n_iters is not None else self.program.n_iters
-        outs, info = self._execute_batch(mems, n, backend)
+        outs, info = self.run_batch_with_info(mems, n_iters, backend=backend,
+                                              stream=stream, chunk=chunk)
         self.last_info = info
         return outs
 
     def run_batch_with_info(self, mems: Sequence[Dict[str, np.ndarray]],
                             n_iters: Optional[int] = None, *,
                             backend: Optional[str] = None,
+                            stream: bool = False,
+                            chunk: Optional[int] = None,
                             **backend_opts: object
                             ) -> Tuple[List[Dict[str, np.ndarray]],
                                        Dict[str, object]]:
@@ -227,9 +281,48 @@ class Executable:
         parallel callers (the execution service's workers, ``explore``
         pools) never read another call's numbers.  Extra keywords are
         forwarded to the backend (``device=`` for per-replica placement
-        on backends advertising ``supports_device``)."""
+        on backends advertising ``supports_device``).  ``stream=True``
+        collects the backend's streaming path into one flat list and
+        returns the stream summary as the info."""
         n = n_iters if n_iters is not None else self.program.n_iters
-        return self._execute_batch(mems, n, backend, **backend_opts)
+        if not stream:
+            return self._execute_batch(mems, n, backend, **backend_opts)
+        outs: List[Dict[str, np.ndarray]] = []
+        gen = self._execute_stream(mems, n, backend, chunk=chunk,
+                                   **backend_opts)
+        while True:
+            try:
+                chunk_outs, _ = next(gen)
+            except StopIteration as stop:
+                return outs, dict(stop.value or {})
+            outs.extend(chunk_outs)
+
+    def run_stream(self, mems: Sequence[Dict[str, np.ndarray]],
+                   n_iters: Optional[int] = None, *,
+                   backend: Optional[str] = None,
+                   chunk: Optional[int] = None):
+        """Streaming execution: a generator yielding lists of output
+        dicts chunk-by-chunk as results drain from the device, while
+        later chunks are still uploading/computing (double buffering on
+        the pallas backend — same bucket-ladder traces as ``run_batch``,
+        zero new traces on a warm engine).
+
+        ``chunk`` bounds samples per chunk (default: the engine's top
+        warm bucket).  At exhaustion ``last_info`` holds the stream
+        summary — ``stream_chunks``, ``overlap_frac`` (fraction of wall
+        time the host was NOT blocked waiting on the device),
+        ``throughput_sps`` — and the same dict is the generator's return
+        value for callers that drive ``next()`` manually."""
+        n = n_iters if n_iters is not None else self.program.n_iters
+        gen = self._execute_stream(mems, n, backend, chunk=chunk)
+        while True:
+            try:
+                outs, _ = next(gen)
+            except StopIteration as stop:
+                info = dict(stop.value or {})
+                self.last_info = info
+                return info
+            yield outs
 
     # -- validation -----------------------------------------------------------
     def validate(self, seed: int = 0, n_iters: Optional[int] = None,
@@ -265,8 +358,18 @@ class Executable:
         mism = 0
         sim_stats = None
         per_backend: Dict[str, bool] = {}
+        # the (B, total_words) image is backend-independent: flatten the
+        # test vectors ONCE and hand the image to every natively-batched
+        # backend that advertises ``accepts_flats`` — a multi-backend
+        # sweep over the same vectors pays one flatten, not len(names)
+        flats = None
         for bname in names:
-            gots, info = self._execute_batch(mems_in, n, bname)
+            opts: Dict[str, object] = {}
+            if getattr(get_backend(bname), "accepts_flats", False):
+                if flats is None:
+                    flats = self.program.flatten_batch(mems_in)
+                opts["flats"] = flats
+            gots, info = self._execute_batch(mems_in, n, bname, **opts)
             bad = sum(int((expect[a] != got[a]).sum())
                       for expect, got in zip(expects, gots)
                       for a in self.program.outputs)

@@ -21,14 +21,19 @@ orchestration):
   * ``metrics``   — the ``stats()`` surface: p50/p99 latency, achieved
     batch size, samples/s, queue depth, rejects by reason.
 
+Bulk chunked traffic goes through ``Service.submit_stream`` — one
+tenant's request pipelined through a single warm trace in bounded spans
+(``StreamResponse``: per-sample futures, ``chunks()`` streaming
+consumption, aggregated overlap info).
+
 The public names re-exported at ``repro.ual`` are ``Service``,
-``Response`` and ``ServiceRejected``.
+``Response``, ``StreamResponse`` and ``ServiceRejected``.
 """
 from repro.ual.service.coalescer import Coalescer
 from repro.ual.service.metrics import ServiceMetrics
 from repro.ual.service.queue import (AdmissionQueue, Request, Response,
-                                     ServiceRejected)
+                                     ServiceRejected, StreamResponse)
 from repro.ual.service.scheduler import Service
 
 __all__ = ["AdmissionQueue", "Coalescer", "Request", "Response", "Service",
-           "ServiceMetrics", "ServiceRejected"]
+           "ServiceMetrics", "ServiceRejected", "StreamResponse"]

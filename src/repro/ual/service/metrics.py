@@ -36,6 +36,13 @@ class ServiceMetrics:
         self.errors = 0             # requests whose batch raised mid-sweep
         self.rejects: Dict[str, int] = {}
         self.tenants: Dict[str, Dict[str, int]] = {}
+        # streaming (submit_stream spans): cumulative counters plus a
+        # bounded window of per-span overlap fractions
+        self.stream_spans = 0
+        self.stream_chunks = 0
+        self.stream_samples = 0
+        self.stream_wall_s = 0.0
+        self._overlap: deque = deque(maxlen=window)
 
     def _tenant(self, tenant: str) -> Dict[str, int]:
         return self.tenants.setdefault(tenant,
@@ -63,6 +70,22 @@ class ServiceMetrics:
         with self._lock:
             self.errors += n_requests
 
+    def record_stream_span(self, chunks: int, samples: int, wall_s: float,
+                           overlap: object = None) -> None:
+        """One executed ``submit_stream`` span: its samples and engine
+        time count toward the service-wide throughput numbers; the span
+        itself is tracked separately (not in the micro-batch-size window
+        — a pipelined span is not a coalesced batch)."""
+        with self._lock:
+            self.stream_spans += 1
+            self.stream_chunks += chunks
+            self.stream_samples += samples
+            self.stream_wall_s += wall_s
+            self.samples += samples
+            self.exec_wall_s += wall_s
+            if overlap is not None:
+                self._overlap.append(float(overlap))
+
     def snapshot(self, queue_depth: int = 0) -> Dict[str, object]:
         with self._lock:
             lat = np.asarray(self._lat_s, dtype=np.float64)
@@ -89,4 +112,14 @@ class ServiceMetrics:
                                        if self.exec_wall_s > 0 else 0.0),
                 "uptime_s": round(elapsed, 3),
                 "tenants": {t: dict(c) for t, c in self.tenants.items()},
+                "stream": {
+                    "spans": self.stream_spans,
+                    "chunks": self.stream_chunks,
+                    "samples": self.stream_samples,
+                    "overlap_frac": (round(float(np.mean(self._overlap)), 4)
+                                     if self._overlap else None),
+                    "samples_per_s": (round(self.stream_samples
+                                            / self.stream_wall_s, 1)
+                                      if self.stream_wall_s > 0 else 0.0),
+                },
             }

@@ -13,6 +13,11 @@ inspect without blocking, and admission-control verdicts surface as
 ``ServiceRejected`` (``response.rejected`` / ``response.reason``) so an
 overloaded or expired request is a *value*, not a lost thread.
 
+``StreamResponse`` is the handle for ``submit_stream``: one chunked
+request pipelined through a warm trace — member ``Response`` futures per
+sample, ``chunks()`` for streaming consumption, and an aggregated stream
+``info`` (overlap, chunks, throughput).
+
 ``AdmissionQueue`` is the thread-safe FIFO between ``submit()`` and the
 dispatcher.  It is deliberately unbounded here — the *service* enforces
 the bound by counting in-flight requests and rejecting at submit time
@@ -123,6 +128,104 @@ class Response:
             callbacks, self._callbacks = self._callbacks, []
         for fn in callbacks:
             fn(self)
+
+
+class StreamResponse:
+    """Handle for one ``Service.submit_stream`` call: a chunked request
+    pipelined through a single warm trace.
+
+    Wraps one member ``Response`` per sample.  ``chunks()`` yields lists
+    of named-output dicts chunk-by-chunk as they drain from the engine
+    (earlier chunks are consumable while later ones still compute);
+    ``results()`` blocks for the flat list.  Admission verdicts surface
+    exactly like ``Response``: ``rejected`` / ``reason`` report the first
+    rejection among the members (all-or-nothing at submit time, per-
+    request ``deadline-exceeded`` afterwards).
+
+    ``info`` aggregates the executed spans' stream summaries —
+    ``stream_chunks``, ``samples``, ``overlap_frac`` (wall-weighted),
+    ``throughput_sps`` — and grows as spans finish; read it after
+    ``results()`` for the final numbers.
+    """
+
+    __slots__ = ("_responses", "chunk", "_lock", "_spans")
+
+    def __init__(self, responses: List[Response], chunk: int) -> None:
+        self._responses = list(responses)
+        self.chunk = max(1, int(chunk))
+        self._lock = threading.Lock()
+        self._spans: List[Dict[str, object]] = []
+
+    def __len__(self) -> int:
+        return len(self._responses)
+
+    @property
+    def responses(self) -> List[Response]:
+        """The member futures, submission order (one per sample)."""
+        return list(self._responses)
+
+    def done(self) -> bool:
+        return all(r.done() for r in self._responses)
+
+    @property
+    def rejected(self) -> bool:
+        return any(r.rejected for r in self._responses)
+
+    @property
+    def reason(self) -> Optional[str]:
+        for r in self._responses:
+            if r.rejected:
+                return r.reason
+        return None
+
+    def chunks(self, timeout: Optional[float] = None):
+        """Yield ``chunk``-sized lists of output dicts as they resolve,
+        submission order — the streaming consumption loop."""
+        group: List[Response] = []
+        for r in self._responses:
+            group.append(r)
+            if len(group) >= self.chunk:
+                yield [g.result(timeout) for g in group]
+                group = []
+        if group:
+            yield [g.result(timeout) for g in group]
+
+    def results(self, timeout: Optional[float] = None
+                ) -> List[Dict[str, np.ndarray]]:
+        """Block for every sample; the flat list, submission order."""
+        return [r.result(timeout) for r in self._responses]
+
+    # -- service-side ---------------------------------------------------------
+    def _merge_span(self, summary: Dict[str, object]) -> None:
+        """Record one executed span's stream summary (worker thread)."""
+        with self._lock:
+            self._spans.append(dict(summary))
+
+    @property
+    def info(self) -> Dict[str, object]:
+        """Aggregate stream summary over the spans executed so far."""
+        with self._lock:
+            spans = list(self._spans)
+        n_chunks = sum(int(s.get("stream_chunks", 0)) for s in spans)
+        samples = sum(int(s.get("batch", s.get("samples", 0)))
+                      for s in spans)
+        wall = sum(float(s.get("wall_s", 0.0)) for s in spans)
+        weighted = [(float(s["overlap_frac"]), float(s.get("wall_s", 0.0)))
+                    for s in spans if s.get("overlap_frac") is not None]
+        wsum = sum(w for _, w in weighted)
+        overlap = (round(sum(o * w for o, w in weighted) / wsum, 4)
+                   if wsum > 0 else
+                   (round(sum(o for o, _ in weighted) / len(weighted), 4)
+                    if weighted else None))
+        return {
+            "spans": len(spans),
+            "stream_chunks": n_chunks,
+            "samples": samples,
+            "wall_s": round(wall, 6),
+            "overlap_frac": overlap,
+            "throughput_sps": (round(samples / wall, 1) if wall > 0
+                               else None),
+        }
 
 
 @dataclass

@@ -42,10 +42,30 @@ from repro.ual.program import Program
 from repro.ual.service.coalescer import Coalescer
 from repro.ual.service.metrics import ServiceMetrics
 from repro.ual.service.queue import (AdmissionQueue, Request, Response,
-                                     ServiceRejected)
+                                     ServiceRejected, StreamResponse)
 from repro.ual.target import Target
 
 _STOP = object()
+
+
+class _StreamSpan:
+    """A bounded run of one stream's chunks, riding the admission FIFO as
+    a single item.  Spans are the anti-monopolization unit: a long
+    ``submit_stream`` request is cut into spans of at most ``span``
+    chunks, so other tenants' micro-batches interleave between them in
+    FIFO order instead of waiting out the whole stream."""
+
+    __slots__ = ("requests", "chunk", "stream")
+
+    def __init__(self, requests: List[Request], chunk: int,
+                 stream: StreamResponse) -> None:
+        self.requests = requests
+        self.chunk = chunk
+        self.stream = stream
+
+    @property
+    def key(self):
+        return self.requests[0].key
 
 #: dispatcher wake-up period while the coalescer is empty (no deadline to
 #: honor — this only bounds how fast a shutdown sentinel is noticed)
@@ -59,7 +79,19 @@ class Service:
         fut = svc.submit(program, target, A=a, B=b, tenant="gemm-app")
         out = fut.result(timeout=30)      # named arrays, like exe.run
         print(svc.stats())                # p50/p99, batch size, samples/s
+
+        sr = svc.submit_stream(program, target, mems, tenant="bulk")
+        for outs in sr.chunks(timeout=30):    # chunks drain while later
+            consume(outs)                     # ones still compute
+        sr.info["overlap_frac"]           # aggregated stream summary
         svc.shutdown()
+
+    ``submit_stream`` is the bulk path: one tenant's chunked request
+    pipelined through a single warm trace (the engine's double-buffered
+    streaming mode), cut into bounded *spans* that interleave with other
+    tenants' micro-batches in the admission FIFO — streaming throughput
+    without coalescer monopolization.  Stream activity is reported under
+    ``stats()["stream"]``.
 
     ``max_queue`` bounds admitted-but-unexecuted requests: past it,
     ``submit`` returns an already-rejected future (``queue-full``)
@@ -166,10 +198,13 @@ class Service:
             started = self._started
         if not started:
             for item in self._admission.drain():
+                reqs = (item.requests if isinstance(item, _StreamSpan)
+                        else [item])
                 with self._lock:
-                    self._pending -= 1
-                self._finish_rejected(item, "shutdown",
-                                      "service stopped before execution")
+                    self._pending -= len(reqs)
+                for req in reqs:
+                    self._finish_rejected(req, "shutdown",
+                                          "service stopped before execution")
             return
         # the dispatcher enqueues the worker stop sentinels itself, after
         # its final flush — so flushed batches always precede the
@@ -227,6 +262,75 @@ class Service:
             self._admission.put(req)
         return req.response
 
+    def submit_stream(self, program: Program, target: Target,
+                      mems: Sequence[Dict[str, np.ndarray]], *,
+                      n_iters: Optional[int] = None,
+                      tenant: str = "default",
+                      chunk: Optional[int] = None, span: int = 4,
+                      deadline_ms: Optional[float] = None
+                      ) -> StreamResponse:
+        """Admit one chunked request to be *pipelined* through a single
+        warm trace; returns a ``StreamResponse`` whose ``chunks()``
+        yields results as they drain from the engine.
+
+        ``mems`` is a sequence of named-array dicts (one per sample).
+        ``chunk`` bounds samples per pipelined chunk (default, and cap:
+        ``max_batch`` — chunks ride the service's warm bucket traces, so
+        streaming adds zero new traces).  ``span`` bounds consecutive
+        chunks executed per dispatch (default 4): the stream is cut into
+        spans that interleave with other tenants' micro-batches in the
+        admission FIFO, so one long stream never monopolizes the
+        coalescer.  Admission is all-or-nothing: if the whole stream
+        does not fit under ``max_queue``, every member is rejected
+        ``queue-full`` (a half-admitted stream helps nobody).
+
+        In replicated-router mode chunks are routed as ordinary
+        micro-batches (each replica pipelines within its own sweeps), so
+        ``StreamResponse.info`` reports ``spans == 0`` there.
+        """
+        mems = [dict(m) for m in mems]
+        for m in mems:
+            program.check_arrays(m)
+        if span < 1:
+            raise ValueError(f"span must be >= 1, got {span}")
+        step = self.max_batch if chunk is None else int(chunk)
+        step = max(1, min(step, self.max_batch))
+        now = time.perf_counter()
+        dl_ms = deadline_ms
+        if dl_ms is None:
+            dl_ms = self.deadlines_ms.get(tenant, self.default_deadline_ms)
+        deadline = now + dl_ms / 1e3 if dl_ms is not None else None
+        n = n_iters if n_iters is not None else program.n_iters
+        reqs = [Request(tenant=tenant, program=program, target=target,
+                        mem=m, n_iters=n, t_submit=now, deadline=deadline)
+                for m in mems]
+        sr = StreamResponse([r.response for r in reqs], step)
+        if not reqs:
+            return sr
+        with self._lock:
+            if self._closed:
+                reject = ("shutdown", "service is shut down")
+            elif self._pending + len(reqs) > self.max_queue:
+                reject = ("queue-full",
+                          f"stream of {len(reqs)} does not fit "
+                          f"({self._pending} in flight, "
+                          f"max_queue={self.max_queue})")
+            else:
+                reject = None
+                self._pending += len(reqs)
+                # spans enqueue under the lock for the same
+                # shutdown-race reason as submit(); consecutive spans
+                # are separate FIFO items, so concurrent submitters
+                # interleave between them
+                per_span = step * span
+                for i in range(0, len(reqs), per_span):
+                    self._admission.put(
+                        _StreamSpan(reqs[i:i + per_span], step, sr))
+        if reject is not None:
+            for req in reqs:
+                self._finish_rejected(req, *reject)
+        return sr
+
     def _finish_rejected(self, req: Request, reason: str,
                          detail: str) -> Response:
         self._metrics.record_reject(req.tenant, reason)
@@ -241,6 +345,20 @@ class Service:
             self._batches.put(batch)
         else:
             self._router.route(batch[0].key, batch, early=early)
+
+    def _emit_span(self, span: _StreamSpan) -> None:
+        """Hand one stream span to the execution side.  Plain mode keeps
+        the span whole — a worker pipelines its chunks through the
+        engine's double-buffered path.  Router mode splits it into
+        chunk-sized micro-batches routed like any other flush (each
+        replica's sweeps pipeline internally; cross-chunk double
+        buffering does not survive placement on different devices)."""
+        if self._router is None:
+            self._batches.put(span)
+            return
+        for i in range(0, len(span.requests), span.chunk):
+            batch = span.requests[i:i + span.chunk]
+            self._router.route(batch[0].key, batch)
 
     def _steal_for_idle(self, now: float) -> None:
         """Replicated mode: while there is strictly more idle capacity
@@ -270,13 +388,19 @@ class Service:
             item = self._admission.get(timeout=timeout)
             if item is _STOP:
                 break
-            if item is not None:
+            if isinstance(item, _StreamSpan):
+                self._emit_span(item)
+            elif item is not None:
                 full = self._coalescer.offer(item)
                 if full is not None:
                     self._emit(full)
         # drain: late racers in admission, then every partial bucket
         for item in self._admission.drain():
-            if item is not _STOP:
+            if item is _STOP:
+                continue
+            if isinstance(item, _StreamSpan):
+                self._emit_span(item)
+            else:
                 full = self._coalescer.offer(item)
                 if full is not None:
                     self._emit(full)
@@ -295,7 +419,10 @@ class Service:
                 batch = self._batches.get()
                 if batch is _STOP:
                     break
-                self._run_batch(batch)
+                if isinstance(batch, _StreamSpan):
+                    self._run_stream_span(batch)
+                else:
+                    self._run_batch(batch)
             return
         slot = self._router.slots[index]
         while True:
@@ -334,10 +461,13 @@ class Service:
             exe = installed
         return exe
 
-    def _run_batch(self, batch: List[Request], slot=None) -> int:
-        """Execute one micro-batch; returns how many requests actually
-        rode the sweep (0 when every member was rejected first) so the
-        router's per-replica sample counters stay honest."""
+    def _prepare(self, batch: List[Request]
+                 ) -> Tuple[List[Request], Optional[Executable]]:
+        """Shared front half of batch and span execution: settle the
+        pending count, reject aged-out members, resolve the shared warm
+        Executable.  Returns ``(live, exe)``; ``exe`` is None when every
+        member has already been resolved (expired / verifier-error /
+        compile-failed / compile crash) and there is nothing to run."""
         with self._lock:
             self._pending -= len(batch)
         now = time.perf_counter()
@@ -350,25 +480,39 @@ class Service:
             else:
                 live.append(req)
         if not live:
+            return [], None
+        try:
+            exe = self._executable(live[0])
+        except VerifyError as exc:
+            # a config that fails static verification is a tenant
+            # problem, not a worker crash: reject with the report's
+            # one-line summary, keep the worker alive
+            for req in live:
+                self._finish_rejected(req, "verifier-error",
+                                      exc.report.summary())
+            return [], None
+        except Exception as exc:     # resolve, don't kill the worker
+            self._metrics.record_error(len(live))
+            for req in live:
+                req.response._resolve(exc=exc)
+            return [], None
+        if not exe.success:
+            for req in live:
+                self._finish_rejected(
+                    req, "compile-failed",
+                    f"{req.program.name} does not map onto "
+                    f"{req.target.fabric.name}")
+            return [], None
+        return live, exe
+
+    def _run_batch(self, batch: List[Request], slot=None) -> int:
+        """Execute one micro-batch; returns how many requests actually
+        rode the sweep (0 when every member was rejected first) so the
+        router's per-replica sample counters stay honest."""
+        live, exe = self._prepare(batch)
+        if exe is None:
             return 0
         try:
-            try:
-                exe = self._executable(live[0])
-            except VerifyError as exc:
-                # a config that fails static verification is a tenant
-                # problem, not a worker crash: reject with the report's
-                # one-line summary, keep the worker alive
-                for req in live:
-                    self._finish_rejected(req, "verifier-error",
-                                          exc.report.summary())
-                return 0
-            if not exe.success:
-                for req in live:
-                    self._finish_rejected(
-                        req, "compile-failed",
-                        f"{req.program.name} does not map onto "
-                        f"{req.target.fabric.name}")
-                return 0
             kw: Dict[str, object] = {}
             if slot is not None and slot.device is not None:
                 be = get_backend(live[0].target.backend)
@@ -389,6 +533,47 @@ class Service:
             self._metrics.record_completed(req.tenant, latency)
             req.response._resolve(out, latency_ms=round(latency * 1e3, 3),
                                   batch=len(live), throughput_sps=sps)
+        return len(live)
+
+    def _run_stream_span(self, span: _StreamSpan) -> int:
+        """Pipeline one stream span through the engine's double-buffered
+        path, resolving each chunk's futures AS IT DRAINS — a consumer
+        holding the ``StreamResponse`` sees chunk *i*'s results while
+        chunk *i+1* is still computing."""
+        live, exe = self._prepare(span.requests)
+        if exe is None:
+            return 0
+        idx = 0
+        n_chunks = 0
+        gen = exe._execute_stream([req.mem for req in live],
+                                  live[0].n_iters, None, chunk=span.chunk)
+        try:
+            while True:
+                try:
+                    outs, cinfo = next(gen)
+                except StopIteration as stop:
+                    summary = dict(stop.value or {})
+                    break
+                done = time.perf_counter()
+                members = live[idx:idx + len(outs)]
+                idx += len(outs)
+                n_chunks += 1
+                for req, out in zip(members, outs):
+                    latency = done - req.t_submit
+                    self._metrics.record_completed(req.tenant, latency)
+                    req.response._resolve(out,
+                                          latency_ms=round(latency * 1e3, 3),
+                                          batch=len(outs), stream=True,
+                                          chunk=cinfo.get("chunk"))
+        except Exception as exc:     # resolve the undrained tail
+            self._metrics.record_error(len(live) - idx)
+            for req in live[idx:]:
+                req.response._resolve(exc=exc)
+            return idx
+        self._metrics.record_stream_span(n_chunks, len(live),
+                                         float(summary.get("wall_s", 0.0)),
+                                         summary.get("overlap_frac"))
+        span.stream._merge_span(summary)
         return len(live)
 
     # -- observability --------------------------------------------------------
