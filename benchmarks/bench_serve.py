@@ -20,7 +20,12 @@ any is False):
     somewhere dishonest),
   * ``batch1_latency_bounded`` — lone-request latency <= max_wait +
     a small multiple of the single-sample engine time (+ scheduling
-    slack), i.e. batching never costs an idle caller unbounded waiting.
+    slack), i.e. batching never costs an idle caller unbounded waiting,
+  * ``tracing_overhead_le_5pct`` — re-running the coalesced load with
+    the flight recorder on (``repro.obs``) costs <= 5% throughput
+    (medians of 7 interleaved rounds per arm); the traced passes are
+    exported to ``artifacts/bench/serve_trace.json`` as the bench's
+    trace artifact.
 
 ``--cluster`` runs the **sharded serving cluster** scaling bench
 (``serve_scaling`` in the harness) instead: the parent re-execs a child
@@ -60,10 +65,10 @@ from pathlib import Path
 
 import numpy as np
 
-from repro import ual
+from repro import obs, ual
 from repro.core.dfg import interpret
 
-from benchmarks.common import fmt_table, save
+from benchmarks.common import ART, Timer, fmt_table, save
 
 KERNEL = "gemm"
 N = 256
@@ -130,11 +135,47 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
         # a service that held lone requests indefinitely blows this up
         latency_bound = MAX_WAIT_MS / 1e3 + 20 * t_single + 0.25
 
+        # -- tracing overhead: identical coalesced load, tracer off vs on ---
+        # The bound is <= 5% throughput cost with the flight recorder on,
+        # and the traced passes double as the bench's trace artifact
+        # (artifacts/bench/serve_trace.json).
+        def _service_pass():
+            with ual.Service(max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS,
+                             max_queue=N, workers=1, cache=cache) as s:
+                s.submit(program, target, mems[0]).result(timeout=300)
+                t0 = time.perf_counter()
+                rs = [s.submit(program, target, m) for m in mems]
+                for r in rs:
+                    r.result(timeout=300)
+                return N / (time.perf_counter() - t0)
+
+        # single-pass scheduler jitter on a loaded host dwarfs the tracing
+        # cost itself (individual passes swing 2x either way), so the
+        # arms interleave — drift hits both equally — and the claim
+        # compares MEDIANS over 7 rounds (best-of is hostage to one lucky
+        # spike in either arm), after one discarded warm pass
+        tracer = obs.Tracer(enabled=True, capacity=1 << 16)
+        _service_pass()
+        base_runs, traced_runs = [], []
+        for _ in range(7):
+            base_runs.append(_service_pass())
+            prev = obs.set_tracer(tracer)
+            try:
+                with Timer("serve_traced"):
+                    traced_runs.append(_service_pass())
+            finally:
+                obs.set_tracer(prev)
+        base_sps = float(np.median(base_runs))
+        traced_sps = float(np.median(traced_runs))
+        trace_path = tracer.export_chrome(ART / "serve_trace.json")
+        overhead_pct = 100.0 * (1.0 - traced_sps / base_sps)
+
     claims = {
         "service_speedup_ge_5x": svc_sps >= 5 * seq_sps,
         "bitexact_vs_oracle": bitexact,
         "achieved_batching": (stats["mean_batch"] or 0) > 1,
         "batch1_latency_bounded": batch1_latency <= latency_bound,
+        "tracing_overhead_le_5pct": traced_sps >= 0.95 * base_sps,
     }
     payload = {
         "kernel": KERNEL, "n_requests": N, "max_batch": MAX_BATCH,
@@ -152,6 +193,11 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
                     "rejects": stats["rejects"]},
         "batch1": {"latency_ms": round(batch1_latency * 1e3, 3),
                    "bound_ms": round(latency_bound * 1e3, 3)},
+        "tracing": {"untraced_samples_per_s": round(base_sps, 1),
+                    "traced_samples_per_s": round(traced_sps, 1),
+                    "overhead_pct": round(overhead_pct, 2),
+                    "spans_recorded": tracer.stats()["recorded"],
+                    "trace_file": str(trace_path)},
         "claims": claims,
     }
     save("serve_throughput", payload)
@@ -169,6 +215,9 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
                          "speedup"], rows))
         print(f"batch=1 latency: {payload['batch1']['latency_ms']}ms "
               f"(bound {payload['batch1']['bound_ms']}ms)")
+        print(f"tracing overhead: {payload['tracing']['overhead_pct']}% "
+              f"({payload['tracing']['spans_recorded']} spans -> "
+              f"{payload['tracing']['trace_file']})")
         print("claims:", claims)
     return payload
 

@@ -30,10 +30,10 @@ import time
 
 import numpy as np
 
-from repro import ual
+from repro import obs, ual
 from repro.core.dfg import interpret
 
-from benchmarks.common import fmt_table, save
+from benchmarks.common import ART, Timer, fmt_table, save
 
 KERNEL = "gemm"
 BANK_WORDS = 64
@@ -192,6 +192,25 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
     finally:
         ual.set_default_engine(prev_engine)
 
+    # -- trace artifact: one streaming sweep with the flight recorder on,
+    # exported next to the claims JSON so the upload/compute/drain
+    # pipeline is inspectable at https://ui.perfetto.dev
+    tracer = obs.Tracer(enabled=True)
+    prev = obs.set_tracer(tracer)
+    try:
+        with Timer("stream_traced"):
+            gen = eng.run_stream(flats, n_iters, chunk=CHUNK)
+            while True:
+                try:
+                    next(gen)
+                except StopIteration:
+                    break
+        trace_path = tracer.export_chrome(ART / "stream_trace.json")
+        chunk_spans = sum(1 for s in tracer.spans()
+                          if s.name.startswith("stream:"))
+    finally:
+        obs.set_tracer(prev)
+
     data = {
         "mapped": True, "ii": exe.II, "B": B_TOTAL, "chunk": CHUNK,
         "reps": N_REPS,
@@ -209,6 +228,7 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
                     "discrete_requests": SERVICE_DISCRETE_N,
                     "parity": svc_parity, "stats": svc_stats,
                     "stream_info": stream_info},
+        "trace": {"file": str(trace_path), "chunk_spans": chunk_spans},
     }
     claims = {
         "mapped": True,

@@ -27,9 +27,22 @@ def fmt_table(headers: Sequence[str], rows: List[Sequence]) -> str:
 
 
 class Timer:
+    """Phase timer for the bench harnesses, recorded onto the process
+    tracer (``repro.obs``) when tracing is on — so every bench phase
+    lands in the same trace file as the engine/service spans it wraps.
+    ``Timer().s`` is the measured wall either way."""
+
+    def __init__(self, label: str = "timed"):
+        self.label = label
+
     def __enter__(self):
         self.t0 = time.perf_counter()
         return self
 
     def __exit__(self, *a):
         self.s = time.perf_counter() - self.t0
+        from repro import obs
+        tr = obs.tracer()
+        if tr.enabled:
+            tr.record(f"bench:{self.label}", self.t0, self.t0 + self.s,
+                      cat="bench")

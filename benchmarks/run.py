@@ -18,10 +18,18 @@ parity, populated overlap metrics, zero new traces, recorded in
 (32 requests through a ``max_batch=8`` ``ual.Service``, oracle parity
 spot-checked, nonzero samples/s), and a 2-process mini cluster gate
 (32 requests through ``ual.ClusterService(workers=2)`` sharing one disk
-cache, parity spot-checked, recorded in ``smoke.json["cluster"]``) — a
-fast regression gate for the toolchain, mapping cache, execution
-engines, DSE front-end and serving layer (used by CI, which uploads
+cache, parity spot-checked, recorded in ``smoke.json["cluster"]``), and
+a telemetry gate (one traced request through the service on a fresh
+flight recorder: complete span tree, per-stage breakdown within 10% of
+the reported latency, schema-valid Chrome-trace export to
+``artifacts/bench/smoke_trace.json``, recorded in
+``smoke.json["telemetry"]``) — a fast regression gate for the
+toolchain, mapping cache, execution engines, DSE front-end, serving
+layer and telemetry (used by CI, which uploads
 ``artifacts/bench/smoke.json``).
+
+``--trace OUT.json`` runs anything above with the flight recorder on
+for the whole run and exports one Chrome-trace JSON at the end.
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ from benchmarks import (bench_dse, bench_exec, bench_fig9_spatial_vs_st,
                         bench_roofline, bench_serve, bench_stream,
                         bench_table2_validation, bench_table3_multihop,
                         bench_table4_efficiency)
-from benchmarks.common import fmt_table, save
+from benchmarks.common import ART, fmt_table, save
 
 BENCHES = {
     "table2_validation": bench_table2_validation.run,
@@ -251,6 +259,66 @@ def smoke() -> int:
               f"{sps} samples/s, mean batch {stats['mean_batch']}, "
               f"parity={'ok' if parity else 'FAIL'} ==")
 
+    # -- telemetry gate: one traced request end to end on a fresh flight
+    # recorder — the span tree must be complete (request/queue/coalesce/
+    # exec/resolve), the per-stage breakdown must account for the
+    # reported latency within 10%, and the Chrome-trace export must be
+    # schema-valid (written to artifacts/bench/smoke_trace.json, uploaded
+    # by CI)
+    telemetry_json = None
+    with tempfile.TemporaryDirectory() as d:
+        from repro import obs
+        from repro.obs.trace import validate_chrome
+        tcache = ual.MappingCache(disk_dir=d)
+        target = ual.Target.from_name("hycube", rows=4, cols=4)
+        program = ual.Program.from_kernel(
+            SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports)
+        rng = np.random.default_rng(5)
+        tracer = obs.Tracer(enabled=True)
+        prev_tracer = obs.set_tracer(tracer)
+        try:
+            with ual.Service(max_batch=8, max_wait_ms=5.0,
+                             cache=tcache) as svc:
+                svc.submit(program, target,
+                           program.random_inputs(rng)).result(timeout=300)
+                fut = svc.submit(program, target, program.random_inputs(rng),
+                                 tenant="traced")
+                fut.result(timeout=300)
+            trace = fut.info.get("trace") or {}
+            latency_ms = float(fut.info["latency_ms"])
+            span_names = {s.name for s in tracer.spans(trace.get("trace_id"))}
+            want = {"request", "queue", "coalesce", "exec", "resolve"}
+            missing = sorted(want - span_names)
+            parts = sum(trace.get(k) or 0.0
+                        for k in ("queue_ms", "coalesce_ms", "exec_ms"))
+            parity = (latency_ms > 0
+                      and abs(parts - latency_ms) <= 0.10 * latency_ms)
+            problems = validate_chrome(tracer.to_chrome())
+            trace_path = tracer.export_chrome(ART / "smoke_trace.json")
+        finally:
+            obs.set_tracer(prev_tracer)
+        if missing:
+            failures.append(f"telemetry: span tree incomplete, "
+                            f"missing {missing}")
+        if not parity:
+            failures.append(f"telemetry: breakdown {parts:.3f}ms vs "
+                            f"latency {latency_ms:.3f}ms (>10% apart)")
+        if problems:
+            failures.append(f"telemetry: invalid Chrome trace: "
+                            f"{problems[:3]}")
+        telemetry_json = {"trace_id": trace.get("trace_id"),
+                          "breakdown": trace, "latency_ms": latency_ms,
+                          "span_tree_complete": not missing,
+                          "breakdown_parity_10pct": parity,
+                          "chrome_valid": not problems,
+                          "spans_recorded": tracer.stats()["recorded"],
+                          "trace_file": str(trace_path)}
+        print(f"\n== smoke: telemetry — traced request breakdown "
+              f"{ {k: round(v, 3) for k, v in trace.items() if isinstance(v, float)} } "
+              f"vs latency {latency_ms:.3f}ms, "
+              f"tree={'ok' if not missing else 'INCOMPLETE'}, "
+              f"chrome={'ok' if not problems else 'INVALID'} ==")
+
     # -- mini cluster gate: 32 requests through a 2-process
     # ClusterService (spawn — safe at any point, unlike fork); parity
     # spot-check + nonzero samples/s + merged-stats sanity, so the
@@ -391,7 +459,7 @@ def smoke() -> int:
                    "sweep": sweep_json,
                    "batched_sim": batched_json, "pallas_engine": engine_json,
                    "service": service_json, "cluster": cluster_json,
-                   "stream": stream_json,
+                   "stream": stream_json, "telemetry": telemetry_json,
                    "failures": failures})
     for f in failures:
         print(f"FAIL {f}")
@@ -404,27 +472,43 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast regression gate: compile one kernel per "
                          "fabric, cold + warm, instead of the full benches")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="run with the flight recorder on and export the "
+                         "whole run as Chrome-trace JSON to OUT (open at "
+                         "https://ui.perfetto.dev)")
     args = ap.parse_args()
-    if args.smoke:
-        sys.exit(smoke())
-    names = [args.only] if args.only else list(BENCHES)
-    failed = []
-    for name in names:
-        t0 = time.perf_counter()
-        print(f"\n########## {name} ##########")
-        payload = BENCHES[name]()
-        claims = payload.get("claims", {})
-        bad = [k for k, v in claims.items() if not v]
-        if bad:
-            failed.append((name, bad))
-        print(f"[{name}] done in {time.perf_counter() - t0:.1f}s"
-              + (f"  VIOLATED: {bad}" if bad else "  all claims hold"))
-    print("\n================ SUMMARY ================")
-    if failed:
-        for name, bad in failed:
-            print(f"FAIL {name}: {bad}")
-        sys.exit(1)
-    print(f"all {len(names)} benches passed their paper-claim checks")
+    tracer = prev_tracer = None
+    if args.trace:
+        from repro import obs
+        tracer = obs.Tracer(enabled=True, capacity=1 << 17)
+        prev_tracer = obs.set_tracer(tracer)
+    try:
+        if args.smoke:
+            sys.exit(smoke())
+        names = [args.only] if args.only else list(BENCHES)
+        failed = []
+        for name in names:
+            t0 = time.perf_counter()
+            print(f"\n########## {name} ##########")
+            payload = BENCHES[name]()
+            claims = payload.get("claims", {})
+            bad = [k for k, v in claims.items() if not v]
+            if bad:
+                failed.append((name, bad))
+            print(f"[{name}] done in {time.perf_counter() - t0:.1f}s"
+                  + (f"  VIOLATED: {bad}" if bad else "  all claims hold"))
+        print("\n================ SUMMARY ================")
+        if failed:
+            for name, bad in failed:
+                print(f"FAIL {name}: {bad}")
+            sys.exit(1)
+        print(f"all {len(names)} benches passed their paper-claim checks")
+    finally:
+        if tracer is not None:
+            from repro import obs
+            out = tracer.export_chrome(args.trace)
+            print(f"trace: {len(tracer.spans())} spans -> {out}")
+            obs.set_tracer(prev_tracer)
 
 
 if __name__ == "__main__":

@@ -394,10 +394,16 @@ _default: Optional[MappingCache] = None
 
 
 def default_cache() -> MappingCache:
-    """The process-wide cache ``compile()`` uses when none is passed."""
+    """The process-wide cache ``compile()`` uses when none is passed.
+    Its aggregate stats join the metrics registry as the
+    ``mapping_cache`` source (reads through this accessor, so swapping
+    the default cache needs no re-registration)."""
     global _default
     if _default is None:
+        from repro import obs
         _default = MappingCache()
+        obs.registry().register_source(
+            "mapping_cache", lambda: default_cache().stats(), replace=True)
     return _default
 
 

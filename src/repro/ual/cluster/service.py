@@ -48,8 +48,41 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 #: how often the watchdog polls worker liveness
 _WATCH_TICK_S = 0.2
+
+
+def merge_latency(snaps: Dict[int, Dict[str, object]]) -> Dict[str, object]:
+    """Merge per-worker latency into cluster percentiles.
+
+    Each snapshot may carry a raw ``latency_window_ms`` sample list
+    (shipped by workers; POPPED here so it does not bloat the
+    ``per_worker`` view).  Cluster ``p50_ms``/``p99_ms`` are computed
+    over the concatenated samples — real percentiles of the merged
+    distribution — while ``worst_worker_p99_ms`` keeps the old
+    conservative max-of-workers number for soak-gate continuity.
+    Workers that shipped no window (older snapshot shape) fall back to
+    their pre-computed percentiles via the max path only.
+    """
+    samples: List[float] = []
+    for s in snaps.values():
+        samples.extend(s.pop("latency_window_ms", None) or [])
+    p50s = [s["p50_ms"] for s in snaps.values()
+            if s.get("p50_ms") is not None]
+    p99s = [s["p99_ms"] for s in snaps.values()
+            if s.get("p99_ms") is not None]
+    p50 = obs.percentile(samples, 50)
+    p99 = obs.percentile(samples, 99)
+    return {
+        "p50_ms": (round(p50, 3) if p50 is not None
+                   else (max(p50s) if p50s else None)),
+        "p99_ms": (round(p99, 3) if p99 is not None
+                   else (max(p99s) if p99s else None)),
+        "worst_worker_p99_ms": max(p99s) if p99s else None,
+        "latency_samples_merged": len(samples),
+    }
 
 
 def _worker_main(widx: int, inbox, outbox, cfg: Dict[str, object]) -> None:
@@ -61,6 +94,7 @@ def _worker_main(widx: int, inbox, outbox, cfg: Dict[str, object]) -> None:
     before jax ever loads in this process.
     """
     os.environ.update(cfg.get("env") or {})
+    from repro import obs
     from repro.ual.cache import MappingCache
     from repro.ual.service import Service, ServiceRejected
 
@@ -107,9 +141,28 @@ def _worker_main(widx: int, inbox, outbox, cfg: Dict[str, object]) -> None:
                                   tenant=tenant, deadline_ms=deadline_ms)
                 resp.add_done_callback(_forward(req_id))
             elif kind == "stats":
-                outbox.put(("stats", widx, svc.stats()))
+                snap = svc.stats()
+                # ship the raw latency window so the parent can merge
+                # SAMPLES into real cluster percentiles (not max-of-p99)
+                snap["latency_window_ms"] = \
+                    svc._metrics.latency_window_ms()
+                # spans ship BEFORE the stats reply: the shared outbox is
+                # FIFO per worker, so once the parent's stats() collects
+                # every reply, every span batch has been ingested too
+                tr = obs.tracer()
+                spans = tr.drain()
+                if spans:
+                    outbox.put(("spans", widx, spans, tr.epoch))
+                outbox.put(("stats", widx, snap))
     finally:
         svc.shutdown(timeout=60.0)
+        tr = obs.tracer()
+        spans = tr.drain()
+        if spans:
+            try:
+                outbox.put(("spans", widx, spans, tr.epoch))
+            except (OSError, ValueError):
+                pass
         outbox.put(("stopped", widx))
 
 
@@ -136,6 +189,7 @@ class ClusterService:
                  warmup_buckets: Optional[Sequence[int]] = None,
                  cache_dir: Optional[str] = None,
                  worker_env: Optional[Dict[str, str]] = None,
+                 trace: bool = False,
                  start: bool = True,
                  start_timeout_s: float = 180.0) -> None:
         if workers < 1:
@@ -148,6 +202,13 @@ class ClusterService:
         if cache_dir is None:
             from repro.ual.cache import default_cache_dir
             cache_dir = str(default_cache_dir())
+        env = dict(worker_env or {})
+        # trace=True (or a tracing parent) turns tracing on INSIDE the
+        # spawned workers via the env; their span batches ride the
+        # result pipe home and land in the parent tracer with one track
+        # per worker (see export_chrome)
+        if trace or obs.tracer().enabled:
+            env.setdefault(obs.TRACE_ENV, "1")
         self._cfg = {
             "max_batch": max_batch, "max_wait_ms": max_wait_ms,
             "max_queue": max_queue, "threads": worker_threads,
@@ -155,7 +216,7 @@ class ClusterService:
             "warmup_buckets": (tuple(warmup_buckets)
                                if warmup_buckets is not None else None),
             "cache_dir": cache_dir or None,
-            "env": dict(worker_env or {}),
+            "env": env,
         }
 
         self._lock = threading.Lock()
@@ -357,6 +418,10 @@ class ClusterService:
                 if entry is not None:
                     entry[0]._resolve(exc=RuntimeError(
                         f"worker {widx}: {text}"))
+            elif kind == "spans":
+                _, widx, spans, epoch = msg
+                obs.tracer().ingest(spans, epoch=epoch,
+                                    track_prefix=f"worker{widx}")
             elif kind == "stats":
                 with self._stats_cond:
                     self._stats_buf[msg[1]] = msg[2]
@@ -409,11 +474,14 @@ class ClusterService:
         """One merged cluster view + each worker's full snapshot.
 
         Aggregates are sums (completed / rejects / samples-per-second /
-        queue depth); latency percentiles are the WORST worker's (a
-        cluster is as slow as its slowest replica).  ``routing`` is the
-        front-end's decision counters; per-worker replica routers (when
-        ``replicas > 1``) appear inside each ``per_worker`` snapshot and
-        their steal counts are summed into ``router_steals``.
+        queue depth); latency percentiles are REAL cluster percentiles —
+        workers ship their raw latency windows and the parent merges the
+        samples (``merge_latency``) — with ``worst_worker_p99_ms``
+        keeping the old conservative worst-replica number.  ``routing``
+        is the front-end's decision counters; per-worker replica routers
+        (when ``replicas > 1``) appear inside each ``per_worker``
+        snapshot and their steal counts are summed into
+        ``router_steals``.
         """
         with self._lock:
             live = [i for i in range(self.n_workers) if self._alive[i]]
@@ -447,10 +515,7 @@ class ClusterService:
             for reason, n in s.get("rejects", {}).items():
                 rejects[reason] = rejects.get(reason, 0) + n
             steals += s.get("router", {}).get("steals", 0)
-        p50s = [s["p50_ms"] for s in snaps.values()
-                if s.get("p50_ms") is not None]
-        p99s = [s["p99_ms"] for s in snaps.values()
-                if s.get("p99_ms") is not None]
+        latency = merge_latency(snaps)   # pops the shipped sample windows
         merged.update({
             "completed": sum(s.get("completed", 0) for s in snaps.values()),
             "rejected": sum(s.get("rejected", 0) for s in snaps.values()),
@@ -463,12 +528,19 @@ class ClusterService:
             "exec_samples_per_s": round(
                 sum(s.get("exec_samples_per_s", 0.0)
                     for s in snaps.values()), 1),
-            "p50_ms": max(p50s) if p50s else None,
-            "p99_ms": max(p99s) if p99s else None,
+            **latency,
             "router_steals": steals,
             "per_worker": {i: snaps[i] for i in sorted(snaps)},
         })
         return merged
 
+    def export_chrome(self, path, timeout: float = 30.0):
+        """Write the cluster-wide timeline as Chrome-trace JSON: one
+        track group per worker process (``worker0/...``) plus the
+        parent's own spans.  Triggers a stats round first so every
+        worker ships its buffered span batch before the export."""
+        self.stats(timeout=timeout)
+        return obs.tracer().export_chrome(path)
 
-__all__ = ("ClusterService",)
+
+__all__ = ("ClusterService", "merge_latency")

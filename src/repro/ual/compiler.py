@@ -57,13 +57,17 @@ def compile(program: Program, target: Target, *,
     placements.  ``pipeline`` swaps the default pass list for a custom one
     (extra analysis passes, alternative mapping passes).
     """
+    from repro import obs
     t0 = time.perf_counter()
     backend = get_backend(target.backend)   # fail fast on unknown names
     if target.fabric.temporal and backend.requires_config:
         get_strategy(target.strategy)       # ...and unknown strategies
     ctx = CompileContext(program, target, cache=cache, use_cache=use_cache,
                          backend=backend)
-    (pipeline if pipeline is not None else default_pipeline()).run(ctx)
+    with obs.tracer().span(f"compile:{program.name}", cat="compile",
+                           args={"fabric": target.fabric.name,
+                                 "backend": target.backend}):
+        (pipeline if pipeline is not None else default_pipeline()).run(ctx)
     info = CompileInfo(cache_hit=ctx.cache_hit,
                        mapper_restarts=ctx.restarts_paid,
                        wall_s=time.perf_counter() - t0, key=ctx.key,

@@ -67,6 +67,7 @@ from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
 
 import numpy as np
 
+from repro import obs
 from repro.core.lowering import LinkedConfig, lowered_fingerprint
 
 
@@ -330,30 +331,52 @@ class KernelEngine:
         cold_blocks = 0
         n_samples = 0
         n_chunks = 0
-        inflight: deque = deque()      # (future, b, rows, was_cold)
+        n_dispatched = 0
+        tr = obs.tracer()
+        tron = tr.enabled
+        # one trace groups every chunk span of this stream in the export
+        stream_trace = tr.new_trace_id() if tron else None
+        inflight: deque = deque()  # (future, b, rows, was_cold, t_disp, i)
 
         def drain() -> Tuple[np.ndarray, Dict[str, object]]:
             nonlocal wait_s, cold_blocks, n_samples, n_chunks
-            fut, b, rows, was_cold = inflight.popleft()
+            fut, b, rows, was_cold, t_disp, i_chunk = inflight.popleft()
             t0 = time.perf_counter()
             fut.block_until_ready()
-            wait_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            wait_s += t1 - t0
             out = np.asarray(fut)[:b]
             cold_blocks += was_cold
             used.append(rows)
             n_samples += b
             n_chunks += 1
+            if tron:
+                # device-busy window approximated from dispatch end to
+                # ready; drain = host-side conversion back to numpy
+                attrs = {"chunk": i_chunk, "bucket": rows, "samples": b}
+                tr.record("stream:compute", t_disp, t1, cat="engine",
+                          trace=stream_trace, args=attrs)
+                tr.record("stream:drain", t1, time.perf_counter(),
+                          cat="engine", trace=stream_trace, args=attrs)
             return out, {"chunk": n_chunks - 1, "bucket": rows,
                          "samples": b, "traced": int(was_cold)}
 
         for blk in blocks():
             b = blk.shape[0]
+            t_up = time.perf_counter() if tron else 0.0
             rows = self._block_rows(b)
             if rows != b:
                 blk = np.concatenate(
                     [blk, np.zeros((rows - b, blk.shape[1]), np.int32)])
             fut, was_cold = self._dispatch_block(blk, niter)
-            inflight.append((fut, b, rows, was_cold))
+            t_disp = time.perf_counter() if tron else 0.0
+            if tron:
+                tr.record("stream:upload", t_up, t_disp, cat="engine",
+                          trace=stream_trace,
+                          args={"chunk": n_dispatched, "bucket": rows,
+                                "samples": b, "traced": int(was_cold)})
+            inflight.append((fut, b, rows, was_cold, t_disp, n_dispatched))
+            n_dispatched += 1
             while len(inflight) > depth:
                 yield drain()
         while inflight:
@@ -639,11 +662,17 @@ _default_lock = threading.Lock()
 
 
 def default_engine() -> CompiledKernelCache:
-    """The process-wide engine cache the pallas backend uses by default."""
+    """The process-wide engine cache the pallas backend uses by default.
+    Its aggregate stats are registered as the ``engine`` source in the
+    metrics registry (``obs.registry().snapshot()["sources"]["engine"]``)
+    — the source reads through this accessor, so swapping the default
+    engine needs no re-registration."""
     global _default
     with _default_lock:
         if _default is None:
             _default = CompiledKernelCache()
+            obs.registry().register_source(
+                "engine", lambda: default_engine().stats(), replace=True)
         return _default
 
 

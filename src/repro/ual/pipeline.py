@@ -337,12 +337,19 @@ class Pipeline:
     passes: List[CompilePass]
 
     def run(self, ctx: CompileContext) -> CompileContext:
+        from repro import obs
+        tr = obs.tracer()
         try:
             for p in self.passes:
                 t0 = time.perf_counter()
                 stats = p.run(ctx)
-                ctx.records.append(
-                    PassRecord(p.name, time.perf_counter() - t0, stats or {}))
+                t1 = time.perf_counter()
+                ctx.records.append(PassRecord(p.name, t1 - t0, stats or {}))
+                if tr.enabled:
+                    # one span per pass, same wall-times as the
+                    # PassRecord; nests under compile()'s root span
+                    tr.record(f"pass:{p.name}", t0, t1, cat="compile",
+                              args=stats or None)
         finally:
             # the cold winner's per-key compile locks (see CompileContext
             # .key_lock / .process_lock) are released here even when a

@@ -1,64 +1,86 @@
 """The service's metrics surface: what ``Service.stats()`` reports.
 
-One lock-guarded accumulator records every request outcome and every
-executed micro-batch.  Latency and batch-size samples live in bounded
-windows (``deque(maxlen=...)``) so a long-running service reports recent
-behavior at constant memory; counters (completed, samples, rejects by
-reason, per-tenant totals) are cumulative.
+The recording API is unchanged (``record_batch``, ``record_completed``,
+``record_reject``, ``record_error``, ``record_stream_span``,
+``snapshot``) but the storage now lives in the process-wide metrics
+registry (``repro.obs``): every instance claims a unique ``service``
+namespace and registers typed instruments, so ``obs.registry().snapshot()``
+shows this service alongside the engine cache, the mapping cache and the
+cluster router in one JSON schema.  ``snapshot()`` *reads through* those
+instruments and keeps its historical dict shape.
 
-``snapshot()`` folds the raw samples into the serving numbers that
-matter: p50/p99 request latency (submit -> resolve), achieved micro-batch
-size (mean/max — *the* dynamic-batching health number: 1.0 means the
-coalescer buys nothing), samples/s two ways (wall-clock service
-throughput since start, and engine throughput over sweep wall time
-alone), queue depth, and rejects keyed by reason.
+Latency and batch-size samples live in bounded histogram windows so a
+long-running service reports recent behavior at constant memory;
+counters (completed, samples, rejects by reason, per-tenant totals) are
+cumulative.  ``snapshot()`` folds the samples into the serving numbers
+that matter: p50/p99 request latency (submit -> resolve), achieved
+micro-batch size (mean/max — *the* dynamic-batching health number: 1.0
+means the coalescer buys nothing), samples/s two ways (wall-clock
+service throughput since start, and engine throughput over sweep wall
+time alone), queue depth, and rejects keyed by reason.
+
+Mid-sweep batch errors are attributed per tenant: every tenant row
+carries an ``"errors"`` key next to ``"completed"``/``"rejected"``
+(``record_error`` takes the failed batch's tenant names, not a bare
+count, so a multi-tenant batch failure shows up on every tenant it
+actually hit).
 """
 from __future__ import annotations
 
 import threading
 import time
-from collections import deque
-from typing import Dict
+from typing import Dict, Iterable, List, Optional
 
-import numpy as np
+from repro import obs
 
 
 class ServiceMetrics:
-    def __init__(self, window: int = 4096) -> None:
+    def __init__(self, window: int = 4096,
+                 registry: Optional[obs.MetricsRegistry] = None) -> None:
+        reg = registry if registry is not None else obs.registry()
+        ns = self._ns = reg.namespace("service")
+        self.namespace = ns.prefix
+        self._completed = ns.counter("completed")
+        self._samples = ns.counter("samples")
+        self._batches = ns.counter("batches")
+        self._exec_wall = ns.counter("exec_wall_s")
+        self._errors = ns.counter("errors")
+        self._lat_ms = ns.histogram("latency_ms", window)
+        self._batch_sizes = ns.histogram("batch_size", window)
+        self._stream_spans = ns.counter("stream.spans")
+        self._stream_chunks = ns.counter("stream.chunks")
+        self._stream_samples = ns.counter("stream.samples")
+        self._stream_wall = ns.counter("stream.wall_s")
+        self._overlap = ns.histogram("stream.overlap_frac", window)
+        # per-reason / per-tenant breakdowns stay plain dicts (dynamic
+        # key sets; one lock, cheap updates)
         self._lock = threading.Lock()
-        self._lat_s: deque = deque(maxlen=window)
-        self._batch_sizes: deque = deque(maxlen=window)
-        self._t0 = time.perf_counter()
-        self.completed = 0          # requests resolved with outputs
-        self.samples = 0            # == completed (one sample per request)
-        self.batches = 0            # micro-batches executed
-        self.exec_wall_s = 0.0      # engine time across all sweeps
-        self.errors = 0             # requests whose batch raised mid-sweep
         self.rejects: Dict[str, int] = {}
         self.tenants: Dict[str, Dict[str, int]] = {}
-        # streaming (submit_stream spans): cumulative counters plus a
-        # bounded window of per-span overlap fractions
-        self.stream_spans = 0
-        self.stream_chunks = 0
-        self.stream_samples = 0
-        self.stream_wall_s = 0.0
-        self._overlap: deque = deque(maxlen=window)
+        self._t0 = time.perf_counter()
+
+    def close(self) -> None:
+        """Drop this instance's instruments from the registry (call on
+        service shutdown so the registry never grows without bound).
+        The instruments themselves stay usable — ``snapshot()`` after
+        ``close()`` still works, it just no longer appears in the
+        registry view."""
+        self._ns.drop()
 
     def _tenant(self, tenant: str) -> Dict[str, int]:
-        return self.tenants.setdefault(tenant,
-                                       {"completed": 0, "rejected": 0})
+        return self.tenants.setdefault(
+            tenant, {"completed": 0, "rejected": 0, "errors": 0})
 
     def record_batch(self, size: int, wall_s: float) -> None:
-        with self._lock:
-            self.batches += 1
-            self.samples += size
-            self.exec_wall_s += wall_s
-            self._batch_sizes.append(size)
+        self._batches.inc()
+        self._samples.inc(size)
+        self._exec_wall.inc(wall_s)
+        self._batch_sizes.observe(size)
 
     def record_completed(self, tenant: str, latency_s: float) -> None:
+        self._completed.inc()
+        self._lat_ms.observe(latency_s * 1e3)
         with self._lock:
-            self.completed += 1
-            self._lat_s.append(latency_s)
             self._tenant(tenant)["completed"] += 1
 
     def record_reject(self, tenant: str, reason: str) -> None:
@@ -66,9 +88,15 @@ class ServiceMetrics:
             self.rejects[reason] = self.rejects.get(reason, 0) + 1
             self._tenant(tenant)["rejected"] += 1
 
-    def record_error(self, n_requests: int) -> None:
+    def record_error(self, tenants: Iterable[str]) -> None:
+        """One failed batch: ``tenants`` is the tenant name of every
+        request that rode it (duplicates count — two failed requests from
+        one tenant are two errors)."""
+        tenants = list(tenants)
+        self._errors.inc(len(tenants))
         with self._lock:
-            self.errors += n_requests
+            for t in tenants:
+                self._tenant(t)["errors"] += 1
 
     def record_stream_span(self, chunks: int, samples: int, wall_s: float,
                            overlap: object = None) -> None:
@@ -76,50 +104,69 @@ class ServiceMetrics:
         time count toward the service-wide throughput numbers; the span
         itself is tracked separately (not in the micro-batch-size window
         — a pipelined span is not a coalesced batch)."""
-        with self._lock:
-            self.stream_spans += 1
-            self.stream_chunks += chunks
-            self.stream_samples += samples
-            self.stream_wall_s += wall_s
-            self.samples += samples
-            self.exec_wall_s += wall_s
-            if overlap is not None:
-                self._overlap.append(float(overlap))
+        self._stream_spans.inc()
+        self._stream_chunks.inc(chunks)
+        self._stream_samples.inc(samples)
+        self._stream_wall.inc(wall_s)
+        self._samples.inc(samples)
+        self._exec_wall.inc(wall_s)
+        if overlap is not None:
+            self._overlap.observe(float(overlap))
+
+    # -- readout ------------------------------------------------------------
+    @property
+    def completed(self) -> int:
+        return int(self._completed.value)
+
+    @property
+    def errors(self) -> int:
+        return int(self._errors.value)
+
+    def latency_window_ms(self) -> List[float]:
+        """The raw bounded latency window (ms) — what a cluster worker
+        ships upstream so the parent can merge *samples* into real
+        cluster percentiles instead of taking a max of per-worker p99s."""
+        return self._lat_ms.samples()
 
     def snapshot(self, queue_depth: int = 0) -> Dict[str, object]:
+        lat = self._lat_ms.samples()
+        sizes = self._batch_sizes.samples()
+        overlap = self._overlap.samples()
+        samples = self._samples.value
+        exec_wall = self._exec_wall.value
+        stream_samples = self._stream_samples.value
+        stream_wall = self._stream_wall.value
+        elapsed = time.perf_counter() - self._t0
         with self._lock:
-            lat = np.asarray(self._lat_s, dtype=np.float64)
-            sizes = np.asarray(self._batch_sizes, dtype=np.float64)
-            elapsed = time.perf_counter() - self._t0
-            return {
-                "completed": self.completed,
-                "rejected": sum(self.rejects.values()),
-                "rejects": dict(self.rejects),
-                "errors": self.errors,
-                "queue_depth": queue_depth,
-                "batches": self.batches,
-                "p50_ms": (round(float(np.percentile(lat, 50)) * 1e3, 3)
-                           if lat.size else None),
-                "p99_ms": (round(float(np.percentile(lat, 99)) * 1e3, 3)
-                           if lat.size else None),
-                "mean_batch": (round(float(sizes.mean()), 2)
-                               if sizes.size else None),
-                "max_batch": int(sizes.max()) if sizes.size else None,
-                "samples_per_s": (round(self.samples / elapsed, 1)
-                                  if elapsed > 0 else 0.0),
-                "exec_samples_per_s": (round(self.samples / self.exec_wall_s,
-                                             1)
-                                       if self.exec_wall_s > 0 else 0.0),
-                "uptime_s": round(elapsed, 3),
-                "tenants": {t: dict(c) for t, c in self.tenants.items()},
-                "stream": {
-                    "spans": self.stream_spans,
-                    "chunks": self.stream_chunks,
-                    "samples": self.stream_samples,
-                    "overlap_frac": (round(float(np.mean(self._overlap)), 4)
-                                     if self._overlap else None),
-                    "samples_per_s": (round(self.stream_samples
-                                            / self.stream_wall_s, 1)
-                                      if self.stream_wall_s > 0 else 0.0),
-                },
-            }
+            rejects = dict(self.rejects)
+            tenants = {t: dict(c) for t, c in self.tenants.items()}
+        p50 = obs.percentile(lat, 50)
+        p99 = obs.percentile(lat, 99)
+        return {
+            "completed": int(self._completed.value),
+            "rejected": sum(rejects.values()),
+            "rejects": rejects,
+            "errors": int(self._errors.value),
+            "queue_depth": queue_depth,
+            "batches": int(self._batches.value),
+            "p50_ms": round(p50, 3) if p50 is not None else None,
+            "p99_ms": round(p99, 3) if p99 is not None else None,
+            "mean_batch": (round(sum(sizes) / len(sizes), 2)
+                           if sizes else None),
+            "max_batch": int(max(sizes)) if sizes else None,
+            "samples_per_s": (round(samples / elapsed, 1)
+                              if elapsed > 0 else 0.0),
+            "exec_samples_per_s": (round(samples / exec_wall, 1)
+                                   if exec_wall > 0 else 0.0),
+            "uptime_s": round(elapsed, 3),
+            "tenants": tenants,
+            "stream": {
+                "spans": int(self._stream_spans.value),
+                "chunks": int(self._stream_chunks.value),
+                "samples": int(stream_samples),
+                "overlap_frac": (round(sum(overlap) / len(overlap), 4)
+                                 if overlap else None),
+                "samples_per_s": (round(stream_samples / stream_wall, 1)
+                                  if stream_wall > 0 else 0.0),
+            },
+        }

@@ -228,6 +228,41 @@ class StreamResponse:
         }
 
 
+class RequestTrace:
+    """Per-request trace stamps, attached to a ``Request`` only while the
+    process tracer is enabled (``repro.obs``).
+
+    A request crosses three threads (caller -> dispatcher -> worker), so
+    its spans cannot nest as context managers; instead each stage stamps
+    a raw ``perf_counter`` here and the worker materializes the span tree
+    retrospectively at resolve time.  Stage boundaries:
+
+        t_submit  admission (``Service.submit``)
+        t_pulled  dispatcher pulled it off the admission FIFO
+        t_emit    its micro-batch left the coalescer (flush/steal)
+        t_exec0   worker started the engine sweep
+        t_exec1   sweep done (outputs materialized)
+
+    and the derived breakdown on ``fut.info["trace"]`` is
+    ``queue_ms`` (submit -> pulled), ``coalesce_ms`` (pulled -> exec
+    start: coalescer wait + batch-FIFO/dispatch wait), ``exec_ms``
+    (sweep) and ``resolve_ms`` (sweep end -> future resolved), so
+    queue + coalesce + exec sums to the end-to-end latency exactly.
+    """
+
+    __slots__ = ("trace_id", "t_submit", "t_pulled", "t_emit",
+                 "t_exec0", "t_exec1", "exec_args")
+
+    def __init__(self, trace_id: str, t_submit: float) -> None:
+        self.trace_id = trace_id
+        self.t_submit = t_submit
+        self.t_pulled: Optional[float] = None
+        self.t_emit: Optional[float] = None
+        self.t_exec0: Optional[float] = None
+        self.t_exec1: Optional[float] = None
+        self.exec_args: Dict[str, object] = {}
+
+
 @dataclass
 class Request:
     """One admitted single-sample request, en route to a micro-batch."""
@@ -240,6 +275,7 @@ class Request:
     t_submit: float                       # perf_counter at admission
     deadline: Optional[float] = None      # absolute perf_counter, or None
     response: Response = field(default_factory=Response)
+    trace: Optional[RequestTrace] = None  # set only while tracing is on
 
     @property
     def key(self) -> Tuple[str, str, str, int]:

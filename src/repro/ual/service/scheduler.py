@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.analysis.verifier import VerifyError
 from repro.ual.backends import get_backend
 from repro.ual.cache import MappingCache, default_cache
@@ -41,8 +42,9 @@ from repro.ual.executable import Executable
 from repro.ual.program import Program
 from repro.ual.service.coalescer import Coalescer
 from repro.ual.service.metrics import ServiceMetrics
-from repro.ual.service.queue import (AdmissionQueue, Request, Response,
-                                     ServiceRejected, StreamResponse)
+from repro.ual.service.queue import (AdmissionQueue, Request, RequestTrace,
+                                     Response, ServiceRejected,
+                                     StreamResponse)
 from repro.ual.target import Target
 
 _STOP = object()
@@ -183,6 +185,13 @@ class Service:
                                      daemon=True)
                 w.start()
                 self._threads.append(w)
+            if self._router is not None:
+                # replicated mode: the router's per-replica stats join
+                # the unified registry view next to this service's
+                # instruments (dropped again on shutdown)
+                obs.registry().register_source(
+                    f"{self._metrics.namespace}.router",
+                    self._router.stats, replace=True)
         return self
 
     def shutdown(self, timeout: Optional[float] = None) -> None:
@@ -205,6 +214,7 @@ class Service:
                 for req in reqs:
                     self._finish_rejected(req, "shutdown",
                                           "service stopped before execution")
+            self._release_registry()
             return
         # the dispatcher enqueues the worker stop sentinels itself, after
         # its final flush — so flushed batches always precede the
@@ -212,6 +222,16 @@ class Service:
         self._admission.put(_STOP)
         for t in self._threads:
             t.join(timeout)
+        self._release_registry()
+
+    def _release_registry(self) -> None:
+        """Drop this service's instruments (and router source) from the
+        process-wide registry — ``stats()`` keeps working afterwards, the
+        registry just stops listing a dead service."""
+        if self._router is not None:
+            obs.registry().unregister_source(
+                f"{self._metrics.namespace}.router")
+        self._metrics.close()
 
     def __enter__(self) -> "Service":
         return self.start()
@@ -245,6 +265,9 @@ class Service:
                       t_submit=now,
                       deadline=(now + dl_ms / 1e3 if dl_ms is not None
                                 else None))
+        tr = obs.tracer()
+        if tr.enabled:
+            req.trace = RequestTrace(tr.new_trace_id(), now)
         with self._lock:
             if self._closed:
                 return self._finish_rejected(req, "shutdown",
@@ -304,6 +327,13 @@ class Service:
         reqs = [Request(tenant=tenant, program=program, target=target,
                         mem=m, n_iters=n, t_submit=now, deadline=deadline)
                 for m in mems]
+        tr = obs.tracer()
+        if tr.enabled and reqs:
+            # one trace per stream; every member stamps into it so the
+            # exported timeline shows the chunk pipeline end to end
+            tid = tr.new_trace_id()
+            for req in reqs:
+                req.trace = RequestTrace(tid, now)
         sr = StreamResponse([r.response for r in reqs], step)
         if not reqs:
             return sr
@@ -334,13 +364,79 @@ class Service:
     def _finish_rejected(self, req: Request, reason: str,
                          detail: str) -> Response:
         self._metrics.record_reject(req.tenant, reason)
+        if req.trace is not None:
+            t = req.trace
+            obs.tracer().record(
+                "request", t.t_submit, time.perf_counter(), cat="service",
+                trace=t.trace_id,
+                args={"tenant": req.tenant, "outcome": "rejected",
+                      "reason": reason})
         req.response._resolve(exc=ServiceRejected(reason, detail))
         return req.response
 
+    def _finish_trace(self, req: Request, now: float,
+                      streamed: bool = False) -> Dict[str, object]:
+        """Emit one completed request's span tree from its stamps (see
+        ``RequestTrace``) and return the ``fut.info["trace"]`` breakdown.
+        Called on the worker thread just before resolving, so
+        ``resolve_ms`` covers metrics recording + tree emission and
+        ``queue+coalesce+exec`` equals the reported latency exactly.
+        The tree is handed to ``record_tree`` as raw tuples — ``Span``
+        construction is deferred to the (cold) read side, keeping the
+        per-request tracing cost a few microseconds."""
+        t = req.trace
+        tr = obs.tracer()
+        pulled = t.t_pulled if t.t_pulled is not None else t.t_submit
+        exec0 = t.t_exec0 if t.t_exec0 is not None else pulled
+        exec1 = t.t_exec1 if t.t_exec1 is not None else now
+        tid = t.trace_id
+        items = (
+            ("request", t.t_submit, now, "service",
+             {"tenant": req.tenant, "program": req.program.name,
+              "streamed": streamed}),
+            ("queue", t.t_submit, pulled, "service", None),
+            ("coalesce", pulled, exec0, "service", None),
+            ("exec", exec0, exec1, "engine", t.exec_args),
+            ("resolve", exec1, now, "service", None),
+        )
+        if t.t_emit is not None:
+            # dispatch (batch FIFO / router wait) is the tail slice of
+            # the coalesce window — shown as its own child span
+            items += (("dispatch", t.t_emit, exec0, "service", None),)
+        tr.record_tree(tid, items)
+        return {
+            "trace_id": tid,
+            "queue_ms": round((pulled - t.t_submit) * 1e3, 3),
+            "coalesce_ms": round((exec0 - pulled) * 1e3, 3),
+            "exec_ms": round((exec1 - exec0) * 1e3, 3),
+            "resolve_ms": round((now - exec1) * 1e3, 3),
+        }
+
     # -- dispatcher -----------------------------------------------------------
+    def _stamp_pulled(self, item: object) -> None:
+        """Dispatcher-side trace stamp: the moment an item left the
+        admission FIFO (start of its coalescer wait)."""
+        if isinstance(item, _StreamSpan):
+            reqs = item.requests
+        elif isinstance(item, Request):
+            reqs = (item,)
+        else:
+            return
+        if reqs[0].trace is None:
+            return
+        now = time.perf_counter()
+        for req in reqs:
+            if req.trace is not None:
+                req.trace.t_pulled = now
+
     def _emit(self, batch: List[Request], *, early: bool = False) -> None:
         """Hand one flush-ready micro-batch to the execution side: the
         shared FIFO in plain mode, the Router in replicated mode."""
+        if batch[0].trace is not None:
+            now = time.perf_counter()
+            for req in batch:
+                if req.trace is not None:
+                    req.trace.t_emit = now
         if self._router is None:
             self._batches.put(batch)
         else:
@@ -388,6 +484,7 @@ class Service:
             item = self._admission.get(timeout=timeout)
             if item is _STOP:
                 break
+            self._stamp_pulled(item)
             if isinstance(item, _StreamSpan):
                 self._emit_span(item)
             elif item is not None:
@@ -398,6 +495,7 @@ class Service:
         for item in self._admission.drain():
             if item is _STOP:
                 continue
+            self._stamp_pulled(item)
             if isinstance(item, _StreamSpan):
                 self._emit_span(item)
             else:
@@ -492,7 +590,7 @@ class Service:
                                       exc.report.summary())
             return [], None
         except Exception as exc:     # resolve, don't kill the worker
-            self._metrics.record_error(len(live))
+            self._metrics.record_error([req.tenant for req in live])
             for req in live:
                 req.response._resolve(exc=exc)
             return [], None
@@ -512,6 +610,7 @@ class Service:
         live, exe = self._prepare(batch)
         if exe is None:
             return 0
+        t_exec0 = time.perf_counter()
         try:
             kw: Dict[str, object] = {}
             if slot is not None and slot.device is not None:
@@ -521,18 +620,34 @@ class Service:
             outs, info = exe.run_batch_with_info(
                 [req.mem for req in live], n_iters=live[0].n_iters, **kw)
         except Exception as exc:     # resolve, don't kill the worker
-            self._metrics.record_error(len(live))
+            self._metrics.record_error([req.tenant for req in live])
             for req in live:
                 req.response._resolve(exc=exc)
             return len(live)
         done = time.perf_counter()
         self._metrics.record_batch(len(live), float(info.get("wall_s", 0.0)))
         sps = info.get("throughput_sps")
+        traced = live[0].trace is not None
+        if traced:
+            exec_args = {k: info[k] for k in
+                         ("buckets", "padded", "traced", "wall_s")
+                         if k in info}
+            exec_args["batch"] = len(live)
+            for req in live:
+                if req.trace is not None:
+                    req.trace.t_exec0 = t_exec0
+                    req.trace.t_exec1 = done
+                    req.trace.exec_args = exec_args
         for req, out in zip(live, outs):
             latency = done - req.t_submit
             self._metrics.record_completed(req.tenant, latency)
+            extra: Dict[str, object] = {}
+            if req.trace is not None:
+                extra["trace"] = self._finish_trace(req,
+                                                    time.perf_counter())
             req.response._resolve(out, latency_ms=round(latency * 1e3, 3),
-                                  batch=len(live), throughput_sps=sps)
+                                  batch=len(live), throughput_sps=sps,
+                                  **extra)
         return len(live)
 
     def _run_stream_span(self, span: _StreamSpan) -> int:
@@ -545,6 +660,7 @@ class Service:
             return 0
         idx = 0
         n_chunks = 0
+        t_exec0 = time.perf_counter()
         gen = exe._execute_stream([req.mem for req in live],
                                   live[0].n_iters, None, chunk=span.chunk)
         try:
@@ -561,12 +677,22 @@ class Service:
                 for req, out in zip(members, outs):
                     latency = done - req.t_submit
                     self._metrics.record_completed(req.tenant, latency)
+                    extra: Dict[str, object] = {}
+                    if req.trace is not None:
+                        req.trace.t_exec0 = t_exec0
+                        req.trace.t_exec1 = done
+                        req.trace.exec_args = {
+                            "chunk": cinfo.get("chunk"),
+                            "batch": len(outs), "stream": True}
+                        extra["trace"] = self._finish_trace(
+                            req, time.perf_counter(), streamed=True)
                     req.response._resolve(out,
                                           latency_ms=round(latency * 1e3, 3),
                                           batch=len(outs), stream=True,
-                                          chunk=cinfo.get("chunk"))
+                                          chunk=cinfo.get("chunk"),
+                                          **extra)
         except Exception as exc:     # resolve the undrained tail
-            self._metrics.record_error(len(live) - idx)
+            self._metrics.record_error([req.tenant for req in live[idx:]])
             for req in live[idx:]:
                 req.response._resolve(exc=exc)
             return idx
