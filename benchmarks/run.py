@@ -18,7 +18,11 @@ parity, populated overlap metrics, zero new traces, recorded in
 (32 requests through a ``max_batch=8`` ``ual.Service``, oracle parity
 spot-checked, nonzero samples/s), and a 2-process mini cluster gate
 (32 requests through ``ual.ClusterService(workers=2)`` sharing one disk
-cache, parity spot-checked, recorded in ``smoke.json["cluster"]``), and
+cache, parity spot-checked, recorded in ``smoke.json["cluster"]``), a
+chaos gate (16 requests through a 2-process cluster while a
+deterministic ``FaultPlan`` hard-kills worker 0 mid-load: every future
+must resolve, survivors bit-exact, the worker must respawn under its
+``RestartPolicy`` — recorded in ``smoke.json["chaos"]``), and
 a telemetry gate (one traced request through the service on a fresh
 flight recorder: complete span tree, per-stage breakdown within 10% of
 the reported latency, schema-valid Chrome-trace export to
@@ -38,7 +42,8 @@ import sys
 import tempfile
 import time
 
-from benchmarks import (bench_dse, bench_exec, bench_fig9_spatial_vs_st,
+from benchmarks import (bench_chaos, bench_dse, bench_exec,
+                        bench_fig9_spatial_vs_st,
                         bench_fig10_voltage, bench_fig11_breakdown,
                         bench_roofline, bench_serve, bench_stream,
                         bench_table2_validation, bench_table3_multihop,
@@ -58,6 +63,7 @@ BENCHES = {
     "serve_throughput": bench_serve.run,
     "serve_scaling": bench_serve.run_cluster,
     "stream_throughput": bench_stream.run,
+    "chaos": bench_chaos.run,
 }
 
 SMOKE_TARGETS = (
@@ -76,7 +82,8 @@ def smoke() -> int:
     2 strategies through ``compile_many(workers=2)``, push 32
     single-sample requests through a ``max_batch=8`` ``ual.Service``,
     then 32 more through a 2-process ``ual.ClusterService`` sharing one
-    disk cache.
+    disk cache, then 16 through the same cluster shape while a
+    ``FaultPlan`` kills worker 0 mid-load (self-healing gate).
 
     Exit non-zero if any compile fails, any compiled config carries
     verifier findings (``exe.check_report`` must be clean — recorded
@@ -84,9 +91,10 @@ def smoke() -> int:
     mismatches, the
     warm compile misses the cache, the batched engine loses oracle parity
     or reports zero throughput, the JIT engine loses parity or retraces
-    on a warm bucket, the sweep pays redundant mappings, or either
+    on a warm bucket, the sweep pays redundant mappings, either
     serving gate (service / mini cluster) loses parity or reports zero
-    samples/s.
+    samples/s, or the chaos gate loses a future / a survivor's parity /
+    the killed worker.
     Writes ``artifacts/bench/smoke.json`` (uploaded by CI).
     """
     import numpy as np
@@ -157,7 +165,8 @@ def smoke() -> int:
         f"{layer}: hit_ratio={v['hit_ratio']} "
         f"({v['hits']}/{v['lookups']}), stores={v['stores']}, "
         f"disk_entries={v['disk_entries']}"
-        for layer, v in agg.items()))
+        for layer, v in agg.items() if isinstance(v, dict))
+        + f" | quarantined={agg['quarantined']}")
 
     # -- batched-sim throughput gate: one kernel, B=16, vectorized engine
     # off the shared lowered artifact; parity with the oracle + nonzero
@@ -366,6 +375,74 @@ def smoke() -> int:
               f"routing {cstats['routing']['decisions']}, "
               f"parity={'ok' if parity else 'FAIL'} ==")
 
+    # -- chaos gate: same mini cluster, but a deterministic FaultPlan
+    # hard-kills worker 0 after its 3rd request, mid-load.  The
+    # self-healing contract is binary: every future resolves (retried
+    # transparently, zero rejects), survivors are bit-exact, and the
+    # watchdog respawns the slot within its RestartPolicy — so the
+    # failure paths run on every CI pass, not just in full bench runs
+    chaos_json = None
+    with tempfile.TemporaryDirectory() as d:
+        from repro.core.dfg import interpret
+        target = ual.Target.from_name("hycube", rows=4, cols=4)
+        program = ual.Program.from_kernel(
+            SMOKE_KERNEL, n_banks=target.fabric.n_mem_ports)
+        n_req = 16
+        rng = np.random.default_rng(6)
+        mems = [program.random_inputs(rng) for _ in range(n_req)]
+        plan = ual.FaultPlan(
+            [ual.FaultSpec("kill_worker", worker=0, after=2)], seed=0)
+        policy = ual.RestartPolicy(max_restarts=2, backoff_base_s=0.25)
+        with ual.ClusterService(workers=2, max_batch=8, max_wait_ms=5.0,
+                                max_queue=2 * n_req, cache_dir=d,
+                                worker_env=plan.to_env(),
+                                restart_policy=policy) as cs:
+            resps = [cs.submit(program, target, m, tenant="chaos")
+                     for m in mems]
+            outs, rejected = [], 0
+            for r in resps:
+                try:
+                    outs.append(r.result(timeout=300))
+                except ual.ServiceRejected:
+                    outs.append(None)
+                    rejected += 1
+            deadline = time.time() + 60.0
+            wsnap = None
+            while time.time() < deadline:
+                wsnap = cs.stats(timeout=30)["supervision"]["workers"][0]
+                if wsnap["restarts"] >= 1 and wsnap["alive"]:
+                    break
+                time.sleep(0.2)
+            cstats = cs.stats(timeout=30)
+        sup = cstats["supervision"]
+        parity = all(
+            np.array_equal(interpret(program.dfg, mems[i],
+                                     program.n_iters)[name], outs[i][name])
+            for i, out in enumerate(outs) if out is not None
+            for name in program.outputs)
+        if rejected:
+            failures.append(f"chaos: {rejected} requests rejected (retry "
+                            f"not transparent)")
+        if not parity:
+            failures.append("chaos: survivor parity mismatch after retry")
+        if sup["deaths_total"] < 1:
+            failures.append("chaos: fault plan never killed the worker")
+        if not (wsnap and wsnap["alive"] and wsnap["restarts"] >= 1):
+            failures.append(f"chaos: worker 0 not respawned ({wsnap})")
+        chaos_json = {"requests": n_req, "rejected": rejected,
+                      "parity": parity,
+                      "fault_plan": plan.to_json(),
+                      "deaths_total": sup["deaths_total"],
+                      "restarts_total": sup["restarts_total"],
+                      "retries_total": sup["retries_total"],
+                      "recovery_s": wsnap["last_recovery_s"] if wsnap
+                      else None}
+        print(f"\n== smoke: chaos — kill worker 0 mid-load, {n_req} "
+              f"requests: {sup['retries_total']} retried, "
+              f"{rejected} rejected, recovery "
+              f"{chaos_json['recovery_s']}s, "
+              f"parity={'ok' if parity else 'FAIL'} ==")
+
     # -- pallas engine gate: mixed-size batches through the persistent
     # JIT engine; parity spot-check vs the oracle, trace count must equal
     # the number of distinct buckets touched (trace-once/run-many).
@@ -459,6 +536,7 @@ def smoke() -> int:
                    "sweep": sweep_json,
                    "batched_sim": batched_json, "pallas_engine": engine_json,
                    "service": service_json, "cluster": cluster_json,
+                   "chaos": chaos_json,
                    "stream": stream_json, "telemetry": telemetry_json,
                    "failures": failures})
     for f in failures:

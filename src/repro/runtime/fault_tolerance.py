@@ -16,6 +16,13 @@ supervisor wraps the training loop:
     past a threshold, treated as failures (re-dispatch policy).
 
 The failure injection hook makes all of this unit-testable on CPU.
+
+This module covers the *training* loop.  The serving-side sibling —
+worker respawn under ``RestartPolicy``, transparent request retry, the
+per-class circuit breaker, and the ``repro.ual.faults`` deterministic
+injection harness — lives in ``repro.ual.cluster.supervision`` /
+``repro.ual.service.breaker`` (see ``docs/serving.md``,
+"Self-healing").
 """
 from __future__ import annotations
 

@@ -73,8 +73,9 @@ from repro.ual.backends import (Backend, get_backend, list_backends,
 from repro.ual.cache import (CACHE_VERSION, CacheStats, MappingCache,
                              default_cache, default_cache_dir,
                              set_default_cache)
-from repro.ual.cluster import ClusterService, Router
+from repro.ual.cluster import ClusterService, RestartPolicy, Router
 from repro.ual.compiler import compile
+from repro.ual.faults import FaultPlan, FaultSpec, InjectedFault
 from repro.ual.engine import (CompiledKernelCache, KernelEngine,
                               ShardedKernelEngine, bucket_ladder,
                               default_engine, set_default_engine)
@@ -86,16 +87,18 @@ from repro.ual.pipeline import (CompileContext, CompilePass, Pipeline,
 from repro.ual.program import Program
 from repro.ual.service import (Response, Service, ServiceRejected,
                                StreamResponse)
+from repro.ual.service.breaker import CircuitBreaker
 from repro.ual.target import (FABRICS, Target, list_fabrics, register_fabric)
 
 __all__ = [
     "Backend", "CACHE_VERSION", "CacheStats", "CheckReport",
-    "ClusterService", "CompileContext", "CompileInfo",
+    "CircuitBreaker", "ClusterService", "CompileContext", "CompileInfo",
     "CompiledKernelCache", "CompilePass", "DesignPoint", "Diagnostic",
-    "Executable", "ExploreReport", "FABRICS", "KernelEngine",
-    "LinkedConfig", "MapperStrategy", "MappingCache", "PassRecord",
-    "Pipeline", "Program", "Response", "Router", "Service",
-    "ServiceRejected", "ShardedKernelEngine", "StreamResponse", "Target",
+    "Executable", "ExploreReport", "FABRICS", "FaultPlan", "FaultSpec",
+    "InjectedFault", "KernelEngine", "LinkedConfig", "MapperStrategy",
+    "MappingCache", "PassRecord", "Pipeline", "Program", "Response",
+    "RestartPolicy", "Router", "Service", "ServiceRejected",
+    "ShardedKernelEngine", "StreamResponse", "Target",
     "VerifyError", "VerifyPass",
     "bucket_ladder", "compile", "compile_many", "default_cache",
     "default_cache_dir", "default_engine", "default_pipeline", "explore",

@@ -31,6 +31,15 @@ pipeline can double-check under it — two threads compiling the same
 lowering (the execution service leans on this when a cold tenant's first
 requests arrive on several workers at once).
 
+Disk entries are self-verifying: every file carries a magic tag and a
+SHA-256 checksum over the pickled payload, written atomically with it.
+A reader that finds a torn, truncated or bit-flipped entry (disk died
+mid-write, an operator truncated the file, a fault-injection run
+corrupted it on purpose) treats it as a miss, *quarantines* the file by
+renaming it to ``<name>.corrupt`` — so the poisoned bytes can never be
+re-read, but stay on disk for post-mortem — and recompiles.  Quarantine
+counts surface per layer in the aggregate stats view.
+
 The disk layer is additionally safe under multi-PROCESS use (the
 ``ClusterService`` worker pool shares one directory):
 
@@ -54,6 +63,7 @@ in-process cache.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import pickle
 import threading
@@ -67,7 +77,30 @@ from repro.core.mapper import MAPPER_VERSION, MapResult
 #: bump to invalidate on-disk entries when the MapResult/MachineConfig
 #: pickle format changes; mapper *behavior* changes are covered separately
 #: by core.mapper.MAPPER_VERSION (also folded into the entry name)
-CACHE_VERSION = 1
+#: (v2: entries carry a magic tag + SHA-256 payload checksum)
+CACHE_VERSION = 2
+
+#: on-disk entry envelope: MAGIC + 16-byte checksum prefix + pickle blob
+_MAGIC = b"UALC\x02"
+_CSUM_LEN = 16
+
+
+def _pack_entry(payload: object) -> bytes:
+    blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+    return _MAGIC + hashlib.sha256(blob).digest()[:_CSUM_LEN] + blob
+
+
+def _unpack_entry(raw: bytes) -> object:
+    """Verify the envelope and unpickle; raises ``ValueError`` on a bad
+    magic/length/checksum (torn write, truncation, bit flip) so the
+    caller can quarantine the file instead of feeding pickle garbage."""
+    hdr = len(_MAGIC) + _CSUM_LEN
+    if len(raw) < hdr or not raw.startswith(_MAGIC):
+        raise ValueError("bad cache entry header")
+    csum, blob = raw[len(_MAGIC):hdr], raw[hdr:]
+    if hashlib.sha256(blob).digest()[:_CSUM_LEN] != csum:
+        raise ValueError("cache entry checksum mismatch")
+    return pickle.loads(blob)
 
 
 def default_cache_dir() -> Path:
@@ -96,6 +129,8 @@ class CacheStats:
     lowered_misses: int = 0
     lowered_stores: int = 0
     lowered_disk_hits: int = 0
+    #: corrupt disk entries detected and renamed aside (both layers)
+    quarantined: int = 0
     #: probe for on-disk entry counts, wired up by the owning
     #: ``MappingCache`` so the aggregate view can report them; a bare
     #: ``CacheStats`` (no owner) reports zero disk entries
@@ -106,6 +141,7 @@ class CacheStats:
         self.hits = self.misses = self.stores = self.disk_hits = 0
         self.lowered_hits = self.lowered_misses = 0
         self.lowered_stores = self.lowered_disk_hits = 0
+        self.quarantined = 0
 
     @staticmethod
     def _layer(hits: int, misses: int, stores: int, disk_hits: int,
@@ -127,6 +163,7 @@ class CacheStats:
             "lowered": self._layer(self.lowered_hits, self.lowered_misses,
                                    self.lowered_stores,
                                    self.lowered_disk_hits, l_disk),
+            "quarantined": self.quarantined,
         }
 
 
@@ -203,6 +240,26 @@ class MappingCache:
                 f"v{CACHE_VERSION}m{MAPPER_VERSION}l{LOWERING_VERSION}_"
                 f"{pdig[:20]}_{tdig[:20]}_low.pkl")
 
+    def _read_entry(self, path: Path) -> Optional[object]:
+        """Read + verify one disk entry; a torn/corrupt/stale file is
+        quarantined (renamed to ``<name>.corrupt``) and reported as a
+        miss — never an exception, never silently re-readable.  Caller
+        holds ``self._lock``."""
+        try:
+            raw = path.read_bytes()
+        except OSError:
+            return None  # vanished/unreadable: plain miss
+        try:
+            return _unpack_entry(raw)
+        except (ValueError, pickle.UnpicklingError, EOFError,
+                AttributeError, ImportError, TypeError, IndexError):
+            self.stats.quarantined += 1
+            try:
+                os.replace(path, path.with_name(path.name + ".corrupt"))
+            except OSError:
+                pass  # raced with another reader's quarantine: fine
+            return None
+
     def _load(self, key: Tuple[str, str]
               ) -> Tuple[Optional[MapResult], bool]:
         """Memory-then-disk lookup, no counters; returns
@@ -212,13 +269,8 @@ class MappingCache:
         if self.disk_dir is not None:
             path = self._path(key)
             if path.exists():
-                try:
-                    with path.open("rb") as f:
-                        result = pickle.load(f)
-                except (OSError, pickle.UnpicklingError, EOFError,
-                        AttributeError, ImportError):
-                    pass  # stale/corrupt entry: treat as a miss
-                else:
+                result = self._read_entry(path)
+                if result is not None:
                     self._mem[key] = result
                     return result, True
         return None, False
@@ -251,7 +303,8 @@ class MappingCache:
             return self.disk_dir is not None and self._path(key).exists()
 
     def _write_atomic(self, path: Path, payload: object) -> None:
-        """Publish ``payload`` at ``path`` atomically (tmp + os.replace).
+        """Publish ``payload`` at ``path`` atomically (tmp + os.replace),
+        wrapped in the checksummed entry envelope.
 
         Runs OUTSIDE the cache lock — a slow disk store must not stall
         unrelated lookups.  Failures are tolerated when the final path
@@ -263,8 +316,7 @@ class MappingCache:
         tmp = path.with_suffix(
             f".tmp.{os.getpid()}.{threading.get_ident()}")
         try:
-            with tmp.open("wb") as f:
-                pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+            tmp.write_bytes(_pack_entry(payload))
             os.replace(tmp, path)  # atomic: racers never read torn files
         except OSError:
             try:
@@ -330,16 +382,12 @@ class MappingCache:
         elif self.disk_dir is not None:
             path = self._lowered_path(key)
             if path.exists():
-                try:
-                    with path.open("rb") as f:
-                        fp, linked = pickle.load(f)
-                except (OSError, pickle.UnpicklingError, EOFError,
-                        AttributeError, ImportError, TypeError, ValueError):
-                    pass  # stale/corrupt entry: treat as a miss
-                else:
-                    if fp == fingerprint:
-                        self._mem_lowered[key] = (fp, linked)
-                        return linked, True
+                entry = self._read_entry(path)
+                if (isinstance(entry, tuple) and len(entry) == 2
+                        and entry[0] == fingerprint):
+                    fp, linked = entry
+                    self._mem_lowered[key] = (fp, linked)
+                    return linked, True
         return None, False
 
     def get_lowered(self, key: Tuple[str, str],

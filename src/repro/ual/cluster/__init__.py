@@ -13,5 +13,7 @@ Three layers, smallest first:
 """
 from repro.ual.cluster.replica import ReplicaSlot, Router
 from repro.ual.cluster.service import ClusterService
+from repro.ual.cluster.supervision import RestartPolicy, WorkerState
 
-__all__ = ("ClusterService", "ReplicaSlot", "Router")
+__all__ = ("ClusterService", "ReplicaSlot", "RestartPolicy", "Router",
+           "WorkerState")

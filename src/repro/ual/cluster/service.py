@@ -21,9 +21,21 @@ pieces:
   * **collector thread** (parent) — drains the workers' outbox and
     resolves the parent-side ``Response`` futures, so ``submit`` callers
     use the exact same future API as the in-process service.
-  * **watchdog thread** (parent) — a worker process dying does not
-    strand its in-flight requests: they resolve as ``ServiceRejected``
-    (``worker-died``) and the worker leaves the routing set.
+  * **watchdog thread** (parent) — the self-healing loop.  A dead
+    worker's in-flight requests are **transparently re-dispatched** to
+    live workers (safe: pure compute keyed on content digests, so a
+    duplicate execution is idempotent) — bounded by ``max_retries`` and
+    never past the request's deadline, with each hop visible as a
+    ``retry`` obs span and counted in ``fut.info["retries"]``.  The
+    worker itself is **respawned** under the ``RestartPolicy``
+    (exponential backoff, bounded restart budget) and rejoins the
+    routing set warm: its compatibility classes are re-registered and
+    the artifacts re-load from the shared disk cache, no re-mapping.
+    Only when the retry budget is exhausted (or no worker is live) does
+    a caller see a ``worker-died`` verdict — every submitted future
+    resolves or carries a verdict, none is ever lost or stuck.
+    ``stats()["supervision"]`` reports deaths/restarts/backoff/uptime
+    per worker.
   * **merged stats** (``stats()``) — one cluster view: aggregate
     completed / samples-per-second / rejects, conservative p50/p99
     (worst worker), front-end routing decisions, plus each worker's full
@@ -49,6 +61,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import obs
+from repro.ual.cluster.supervision import RestartPolicy, WorkerState
 
 #: how often the watchdog polls worker liveness
 _WATCH_TICK_S = 0.2
@@ -95,8 +108,13 @@ def _worker_main(widx: int, inbox, outbox, cfg: Dict[str, object]) -> None:
     """
     os.environ.update(cfg.get("env") or {})
     from repro import obs
+    from repro.ual import faults
     from repro.ual.cache import MappingCache
     from repro.ual.service import Service, ServiceRejected
+
+    # fault plans ride the env (REPRO_UAL_FAULTS) exactly like tracing;
+    # binding the worker index arms worker-targeted kill specs
+    faults.set_worker_index(widx)
 
     cache = (MappingCache(disk_dir=cfg["cache_dir"])
              if cfg.get("cache_dir") else None)
@@ -136,6 +154,10 @@ def _worker_main(widx: int, inbox, outbox, cfg: Dict[str, object]) -> None:
             elif kind == "req":
                 (_, req_id, class_id, mem, n_iters, tenant,
                  deadline_ms) = msg
+                # armed kill_worker specs fire here, BEFORE submit: the
+                # triggering request dies in flight with the process,
+                # exactly the crash shape the parent's retry path heals
+                faults.on_request()
                 program, target = classes[class_id]
                 resp = svc.submit(program, target, mem, n_iters=n_iters,
                                   tenant=tenant, deadline_ms=deadline_ms)
@@ -166,6 +188,23 @@ def _worker_main(widx: int, inbox, outbox, cfg: Dict[str, object]) -> None:
         outbox.put(("stopped", widx))
 
 
+@dataclasses.dataclass
+class _Flight:
+    """Parent-side record of one in-flight request.  Retains the full
+    submission payload (arrays, class, trip count, deadline) so the
+    watchdog can re-dispatch it to a live worker if the one it rode
+    dies — the transparent-retry path."""
+
+    resp: object                      # parent-side Response future
+    widx: int                         # worker currently carrying it
+    tenant: str
+    class_id: Tuple[str, str, str, int]
+    arrays: Dict[str, np.ndarray]
+    n_iters: int
+    deadline: Optional[float]         # absolute parent perf_counter
+    retries: int = 0
+
+
 class ClusterService:
     """Sharded serving cluster: N worker processes, one front-end.
 
@@ -178,9 +217,16 @@ class ClusterService:
     ``worker_threads`` / ``replicas`` / ``warmup_buckets`` configure
     each worker's inner ``Service``; ``worker_env`` is merged into each
     worker's environment before jax loads there (device forcing goes
-    here — see ``launch.mesh.forced_device_env``).  ``cache_dir`` is the
-    shared on-disk artifact cache (defaults to the user-level cache
-    directory); pass an empty string to disable disk sharing.
+    here — see ``launch.mesh.forced_device_env``; fault plans via
+    ``FaultPlan.to_env()``).  ``cache_dir`` is the shared on-disk
+    artifact cache (defaults to the user-level cache directory); pass
+    an empty string to disable disk sharing.
+
+    ``restart_policy`` governs how dead workers are respawned
+    (``RestartPolicy(max_restarts=0)`` restores evict-only);
+    ``max_retries`` bounds how many times one in-flight request may be
+    re-dispatched after worker deaths before its caller sees a
+    ``worker-died`` verdict.
     """
 
     def __init__(self, workers: int = 2, *, max_batch: int = 32,
@@ -190,6 +236,8 @@ class ClusterService:
                  cache_dir: Optional[str] = None,
                  worker_env: Optional[Dict[str, str]] = None,
                  trace: bool = False,
+                 restart_policy: Optional[RestartPolicy] = None,
+                 max_retries: int = 2,
                  start: bool = True,
                  start_timeout_s: float = 180.0) -> None:
         if workers < 1:
@@ -219,27 +267,41 @@ class ClusterService:
             "env": env,
         }
 
+        self.restart_policy = (restart_policy if restart_policy is not None
+                               else RestartPolicy())
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.max_retries = max_retries
+
         self._lock = threading.Lock()
         self._stats_cond = threading.Condition(self._lock)
+        self._respawn_cond = threading.Condition(self._lock)
         self._closed = False
         self._started = False
         self._req_ids = itertools.count()
-        #: req_id -> (Response, widx, tenant)
-        self._inflight: Dict[int, Tuple[object, int, str]] = {}
+        self._inflight: Dict[int, _Flight] = {}
         self._load: List[int] = [0] * workers          # in-flight per worker
         self._registered: List[set] = [set() for _ in range(workers)]
         self._alive: List[bool] = [False] * workers
-        self.decisions: Dict[str, int] = {"affinity": 0, "least_loaded": 0}
+        self._sup: List[WorkerState] = [WorkerState() for _ in range(workers)]
+        #: class_id -> (wire-ready Program, Target): what a respawned
+        #: worker needs to re-register its classes (warm rejoin)
+        self._class_info: Dict[Tuple[str, str, str, int],
+                               Tuple[object, object]] = {}
+        self.decisions: Dict[str, int] = {"affinity": 0, "least_loaded": 0,
+                                          "retry": 0}
         self._stats_buf: Dict[int, Dict[str, object]] = {}
         self._stats_want: set = set()
 
         self._procs: List[mp.process.BaseProcess] = []
         self._inboxes: List[object] = []
-        self._outbox = None
+        self._result_qs: List[object] = []
         self._threads: List[threading.Thread] = []
         self._ready = threading.Event()
         self._n_ready = 0
         self._n_stopped = 0
+        self._watchdog_errors = 0
+        self._watchdog_last_error = ""
         if start:
             self.start()
 
@@ -250,20 +312,32 @@ class ClusterService:
                 return self
             self._started = True
         ctx = mp.get_context("spawn")
-        self._outbox = ctx.Queue()
         for i in range(self.n_workers):
-            inbox = ctx.Queue()
+            # One result queue PER worker: a worker hard-killed mid-write
+            # can tear the message stream, and on a shared pipe that
+            # desyncs every other worker's completions too.  Isolated
+            # pipes contain the damage to the dead worker, and once the
+            # parent drops its write end (on "ready") a hard death reads
+            # as a clean EOF instead of a stuck partial message.
+            inbox, outq = ctx.Queue(), ctx.Queue()
             p = ctx.Process(target=_worker_main,
-                            args=(i, inbox, self._outbox, self._cfg),
+                            args=(i, inbox, outq, self._cfg),
                             name=f"ual-cluster-worker-{i}", daemon=True)
             p.start()
+            self._sup[i].started_at = time.perf_counter()
             self._inboxes.append(inbox)
+            self._result_qs.append(outq)
             self._procs.append(p)
-        for target, name in ((self._collector_loop, "ual-cluster-collect"),
-                             (self._watchdog_loop, "ual-cluster-watch")):
-            t = threading.Thread(target=target, name=name, daemon=True)
+        for i, outq in enumerate(self._result_qs):
+            t = threading.Thread(target=self._collector_loop,
+                                 args=(i, outq),
+                                 name=f"ual-cluster-collect-{i}", daemon=True)
             t.start()
             self._threads.append(t)
+        t = threading.Thread(target=self._watchdog_loop,
+                             name="ual-cluster-watch", daemon=True)
+        t.start()
+        self._threads.append(t)
         if not self._ready.wait(self.start_timeout_s):
             self.shutdown(timeout=10.0)
             raise RuntimeError(
@@ -272,7 +346,14 @@ class ClusterService:
         return self
 
     def shutdown(self, timeout: Optional[float] = 120.0) -> None:
-        """Stop admitting, let every worker flush, join, reject leftovers."""
+        """Stop admitting, let every worker flush, join, reject leftovers.
+
+        Safe against an in-progress respawn: ``_closed`` is set first
+        (no NEW respawn can start), then any spawn already underway is
+        waited out — the watchdog either installs the replacement here
+        (so the stop/join sweep below covers it) or, seeing ``_closed``,
+        reaps it as an orphan itself.  Either way no worker process
+        leaks and the watchdog stays joinable."""
         with self._lock:
             if self._closed:
                 return
@@ -280,6 +361,12 @@ class ClusterService:
             started = self._started
         if not started:
             return
+        with self._respawn_cond:
+            deadline0 = time.perf_counter() + 15.0
+            while any(st.respawning for st in self._sup):
+                rem = deadline0 - time.perf_counter()
+                if rem <= 0 or not self._respawn_cond.wait(rem):
+                    break
         for i, inbox in enumerate(self._inboxes):
             try:
                 inbox.put(("stop",))
@@ -293,17 +380,21 @@ class ClusterService:
             p.join(rem)
             if p.is_alive():
                 p.terminate()
-        # collector/watchdog see _closed + dead procs and exit; give the
-        # collector a moment to drain late completions before rejecting
-        for t in self._threads:
+        # collectors/watchdog see _closed + dead procs and exit; give
+        # the collectors a moment to drain late completions before
+        # rejecting (snapshot under the lock: _respawn appends threads)
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
             t.join(5.0)
         with self._lock:
             leftovers = list(self._inflight.values())
             self._inflight.clear()
         from repro.ual.service import ServiceRejected
-        for resp, _widx, _tenant in leftovers:
-            resp._resolve(exc=ServiceRejected(
-                "shutdown", "cluster stopped before the response arrived"))
+        for fl in leftovers:
+            fl.resp._resolve(exc=ServiceRejected(
+                "shutdown", "cluster stopped before the response arrived"),
+                retries=fl.retries)
 
     def __enter__(self) -> "ClusterService":
         return self.start()
@@ -329,6 +420,9 @@ class ClusterService:
         n = n_iters if n_iters is not None else program.n_iters
         class_id = (program.digest, target.digest, target.backend, n)
         resp = Response()
+        now = time.perf_counter()
+        deadline = (now + deadline_ms / 1e3 if deadline_ms is not None
+                    else None)
 
         def _reject(reason: str, detail: str):
             resp._resolve(exc=ServiceRejected(reason, detail))
@@ -354,70 +448,102 @@ class ClusterService:
                 widx = cands[0]
                 self.decisions["least_loaded"] += 1
             req_id = next(self._req_ids)
-            self._inflight[req_id] = (resp, widx, tenant)
+            self._inflight[req_id] = _Flight(
+                resp=resp, widx=widx, tenant=tenant, class_id=class_id,
+                arrays=arrays, n_iters=n, deadline=deadline)
             self._load[widx] += 1
             need_reg = class_id not in self._registered[widx]
             if need_reg:
                 self._registered[widx].add(class_id)
+            if class_id not in self._class_info:
+                # make_mem is a convenience closure (often a lambda):
+                # strip it for the wire — digest ignores it, workers
+                # never call it.  Kept for the lifetime of the cluster
+                # so respawned workers re-register their classes warm.
+                self._class_info[class_id] = (
+                    dataclasses.replace(program, make_mem=None), target)
+            wire = self._class_info[class_id]
+            inbox = self._inboxes[widx]
         if need_reg:
-            # make_mem is a convenience closure (often a lambda): strip
-            # it for the wire — digest ignores it, workers never call it
-            self._inboxes[widx].put(
-                ("reg", class_id,
-                 dataclasses.replace(program, make_mem=None), target))
-        self._inboxes[widx].put(
-            ("req", req_id, class_id, arrays, n, tenant, deadline_ms))
+            inbox.put(("reg", class_id, wire[0], wire[1]))
+        inbox.put(("req", req_id, class_id, arrays, n, tenant, deadline_ms))
         return resp
 
     # -- parent-side threads --------------------------------------------------
-    def _settle(self, req_id: int):
-        """Remove a finished request from the routing table."""
+    def _settle(self, req_id: int) -> Optional[_Flight]:
+        """Remove a finished request from the routing table.  Returns
+        None for unknown ids — including a late duplicate completion of
+        a request that was already retried and resolved elsewhere (the
+        first resolution wins; re-execution is idempotent)."""
         with self._lock:
-            entry = self._inflight.pop(req_id, None)
-            if entry is not None:
-                self._load[entry[1]] -= 1
-            return entry
+            fl = self._inflight.pop(req_id, None)
+            if fl is not None:
+                self._load[fl.widx] -= 1
+            return fl
 
-    def _collector_loop(self) -> None:
+    def _collector_loop(self, widx: int, outq) -> None:
+        """Drain ONE worker's result queue (one thread per worker).
+
+        The queue has a single writer (its worker), so a torn message —
+        the worker hard-killed mid-``put`` — can only mean that worker
+        is dead: the loop exits and leaves the death to the watchdog.
+        It never touches the other workers' streams.  A respawned
+        worker gets a fresh queue and a fresh collector thread."""
         from repro.ual.service import ServiceRejected
         while True:
             try:
-                msg = self._outbox.get(timeout=0.1)
+                msg = outq.get(timeout=0.1)
             except queue_mod.Empty:
                 with self._lock:
-                    if self._closed and not self._inflight:
-                        return
-                    if self._n_stopped >= self.n_workers:
+                    closed = self._closed
+                if closed:
+                    p = (self._procs[widx]
+                         if widx < len(self._procs) else None)
+                    if p is None or not p.is_alive():
                         return
                 continue
-            except (OSError, ValueError):
-                return
+            except (EOFError, OSError, ValueError):
+                return          # pipe EOF / queue closed: worker is gone
+            except Exception:
+                return          # torn message from a mid-write death
             kind = msg[0]
             if kind == "ready":
                 with self._lock:
                     self._alive[msg[1]] = True
+                    self._sup[msg[1]].record_ready(time.perf_counter())
                     self._n_ready += 1
                     ready = self._n_ready >= self.n_workers
                 if ready:
                     self._ready.set()
+                # Drop the parent's copy of the write end: from here the
+                # worker is the pipe's only writer, so a hard death EOFs
+                # the stream instead of leaving this thread blocked on a
+                # partial message.  (Deferred to "ready" so the fd has
+                # been materialised in the child before we close ours.)
+                try:
+                    outq._writer.close()
+                except (AttributeError, OSError):
+                    pass
             elif kind == "done":
                 _, req_id, widx, out, info = msg
-                entry = self._settle(req_id)
-                if entry is not None:
+                fl = self._settle(req_id)
+                if fl is not None:
                     info["worker"] = widx
-                    entry[0]._resolve(out, **info)
+                    info["retries"] = fl.retries
+                    fl.resp._resolve(out, **info)
             elif kind == "rej":
                 _, req_id, widx, reason, detail = msg
-                entry = self._settle(req_id)
-                if entry is not None:
-                    entry[0]._resolve(
-                        exc=ServiceRejected(reason, detail))
+                fl = self._settle(req_id)
+                if fl is not None:
+                    fl.resp._resolve(
+                        exc=ServiceRejected(reason, detail),
+                        retries=fl.retries)
             elif kind == "err":
                 _, req_id, widx, text = msg
-                entry = self._settle(req_id)
-                if entry is not None:
-                    entry[0]._resolve(exc=RuntimeError(
-                        f"worker {widx}: {text}"))
+                fl = self._settle(req_id)
+                if fl is not None:
+                    fl.resp._resolve(exc=RuntimeError(
+                        f"worker {widx}: {text}"), retries=fl.retries)
             elif kind == "spans":
                 _, widx, spans, epoch = msg
                 obs.tracer().ingest(spans, epoch=epoch,
@@ -431,36 +557,188 @@ class ClusterService:
                 with self._lock:
                     self._alive[msg[1]] = False
                     self._n_stopped += 1
+                return          # "stopped" is the worker's last message
 
     def _watchdog_loop(self) -> None:
-        """A dead worker's in-flight requests reject instead of hanging."""
-        from repro.ual.service import ServiceRejected
+        """The self-healing loop: detect deaths, re-dispatch orphaned
+        in-flight requests to live workers, respawn dead workers under
+        the restart policy.  No future is ever lost — an orphan either
+        rides a retry hop or resolves with a verdict."""
         while True:
             with self._lock:
                 if self._closed:
                     return
             time.sleep(_WATCH_TICK_S)
-            dead: List[int] = []
-            with self._lock:
-                for i, p in enumerate(self._procs):
-                    if self._alive[i] and not p.is_alive():
-                        self._alive[i] = False
-                        dead.append(i)
-                if not dead:
-                    continue
-                orphans = [(rid, entry) for rid, entry
-                           in self._inflight.items() if entry[1] in dead]
-                for rid, entry in orphans:
+            try:
+                self._watch_tick()
+            except Exception as e:  # noqa: BLE001
+                # The supervision thread must outlive any single bad
+                # tick: if it died, orphaned futures would never resolve
+                # and dead workers would never respawn.  Count the error
+                # (surfaced in stats()["supervision"]) and keep going.
+                with self._lock:
+                    self._watchdog_errors += 1
+                    self._watchdog_last_error = f"{type(e).__name__}: {e}"
+
+    def _watch_tick(self) -> None:
+        now = time.perf_counter()
+        dead: List[int] = []
+        orphans: List[Tuple[int, _Flight]] = []
+        with self._lock:
+            for i, p in enumerate(self._procs):
+                if self._alive[i] and not p.is_alive():
+                    self._alive[i] = False
+                    self._sup[i].record_death(now, self.restart_policy)
+                    dead.append(i)
+            if dead:
+                doomed = set(dead)
+                orphans = [(rid, fl) for rid, fl
+                           in self._inflight.items()
+                           if fl.widx in doomed]
+                for rid, fl in orphans:
                     del self._inflight[rid]
-                    self._load[entry[1]] -= 1
+                    self._load[fl.widx] -= 1
+        if dead:
             with self._stats_cond:
                 if self._stats_want & set(dead):
                     self._stats_want -= set(dead)
                     self._stats_cond.notify_all()
-            for rid, (resp, widx, _tenant) in orphans:
-                resp._resolve(exc=ServiceRejected(
-                    "worker-died",
-                    f"worker {widx} exited with the request in flight"))
+            for rid, fl in orphans:
+                self._retry_or_reject(rid, fl, now)
+        self._maybe_respawn(time.perf_counter())
+
+    def _retry_or_reject(self, rid: int, fl: _Flight, now: float) -> None:
+        """One orphaned request: re-dispatch to a live worker (same
+        routing policy as ``submit``) unless the retry budget or the
+        deadline says otherwise."""
+        from repro.ual.service import ServiceRejected
+        dead_widx = fl.widx
+        if fl.deadline is not None and now > fl.deadline:
+            fl.resp._resolve(exc=ServiceRejected(
+                "deadline-exceeded",
+                f"worker {dead_widx} died in flight and the deadline "
+                f"passed (after {fl.retries} retries)"),
+                retries=fl.retries)
+            return
+        if fl.retries >= self.max_retries:
+            fl.resp._resolve(exc=ServiceRejected(
+                "worker-died",
+                f"worker {dead_widx} exited with the request in flight; "
+                f"retry budget ({self.max_retries}) exhausted"),
+                retries=fl.retries)
+            return
+        with self._lock:
+            live = ([] if self._closed else
+                    [i for i in range(self.n_workers) if self._alive[i]])
+            if live:
+                min_load = min(self._load[i] for i in live)
+                cands = [i for i in live if self._load[i] == min_load]
+                warm = [i for i in cands
+                        if fl.class_id in self._registered[i]]
+                widx = warm[0] if warm else cands[0]
+                fl.retries += 1
+                fl.widx = widx
+                self._inflight[rid] = fl
+                self._load[widx] += 1
+                self.decisions["retry"] += 1
+                need_reg = fl.class_id not in self._registered[widx]
+                if need_reg:
+                    self._registered[widx].add(fl.class_id)
+                wire = self._class_info[fl.class_id]
+                inbox = self._inboxes[widx]
+        if not live:
+            fl.resp._resolve(exc=ServiceRejected(
+                "worker-died",
+                f"worker {dead_widx} exited with the request in flight; "
+                f"no live worker to retry on"), retries=fl.retries)
+            return
+        tr = obs.tracer()
+        if tr.enabled:
+            tr.record("retry", now, time.perf_counter(), cat="cluster",
+                      args={"req": rid, "from": dead_widx, "to": widx,
+                            "attempt": fl.retries, "tenant": fl.tenant})
+        rem_ms = ((fl.deadline - now) * 1e3 if fl.deadline is not None
+                  else None)
+        try:
+            if need_reg:
+                inbox.put(("reg", fl.class_id, wire[0], wire[1]))
+            inbox.put(("req", rid, fl.class_id, fl.arrays, fl.n_iters,
+                       fl.tenant, rem_ms))
+        except (OSError, ValueError):
+            # target worker's queue is gone (it died too); the next
+            # watchdog tick will orphan this flight again and re-route
+            pass
+
+    def _maybe_respawn(self, now: float) -> None:
+        """Respawn every dead worker whose backoff has elapsed."""
+        due: List[int] = []
+        with self._lock:
+            if self._closed:
+                return
+            for i, st in enumerate(self._sup):
+                if (not self._alive[i] and not st.respawning
+                        and not st.exhausted
+                        and st.next_respawn_at is not None
+                        and now >= st.next_respawn_at):
+                    st.respawning = True
+                    due.append(i)
+        for i in due:
+            self._respawn(i)
+
+    def _respawn(self, widx: int) -> None:
+        """Spawn the replacement for one dead worker and install it.
+
+        Raced by ``shutdown()``: if ``_closed`` flipped while the
+        process was spawning, the replacement is reaped here instead of
+        installed — never leaked.  On install, the worker's previous
+        compatibility classes are re-registered so it rejoins the
+        routing set warm (artifacts re-load from the shared disk cache;
+        no re-mapping, no cold routing misses)."""
+        st = self._sup[widx]
+        ctx = mp.get_context("spawn")
+        inbox, outq = ctx.Queue(), ctx.Queue()
+        p = ctx.Process(target=_worker_main,
+                        args=(widx, inbox, outq, self._cfg),
+                        name=f"ual-cluster-worker-{widx}", daemon=True)
+        p.start()
+        with self._lock:
+            aborted = self._closed
+            if not aborted:
+                old = self._procs[widx]
+                self._procs[widx] = p
+                self._inboxes[widx] = inbox
+                self._result_qs[widx] = outq
+                st.record_respawned(time.perf_counter())
+                classes = [(cid, self._class_info[cid])
+                           for cid in self._registered[widx]]
+            st.respawning = False
+            self._respawn_cond.notify_all()
+        if aborted:
+            try:
+                inbox.put(("stop",))
+            except (OSError, ValueError):
+                pass
+            p.join(5.0)
+            if p.is_alive():
+                p.terminate()
+                p.join(5.0)
+            return
+        # The predecessor's collector thread winds down on its own (EOF
+        # on the dead worker's private pipe); the replacement gets a
+        # fresh queue + thread so a torn stream can never be inherited.
+        t = threading.Thread(target=self._collector_loop,
+                             args=(widx, outq),
+                             name=f"ual-cluster-collect-{widx}r",
+                             daemon=True)
+        t.start()
+        with self._lock:
+            self._threads.append(t)
+        old.join(0.1)                   # reap the dead predecessor
+        for cid, (prog, targ) in classes:
+            try:
+                inbox.put(("reg", cid, prog, targ))
+            except (OSError, ValueError):
+                break
 
     # -- observability --------------------------------------------------------
     def queue_depth(self) -> int:
@@ -502,12 +780,24 @@ class ClusterService:
                     break
             snaps = dict(self._stats_buf)
         with self._lock:
+            now = time.perf_counter()
             merged: Dict[str, object] = {
                 "cluster": True,
                 "workers": len(live),
                 "inflight": len(self._inflight),
                 "routing": {"decisions": dict(self.decisions),
                             "load": list(self._load)},
+                "supervision": {
+                    "policy": self.restart_policy.snapshot(),
+                    "max_retries": self.max_retries,
+                    "restarts_total": sum(st.restarts for st in self._sup),
+                    "deaths_total": sum(st.deaths for st in self._sup),
+                    "retries_total": self.decisions.get("retry", 0),
+                    "watchdog_errors": self._watchdog_errors,
+                    "watchdog_last_error": self._watchdog_last_error,
+                    "workers": {i: st.snapshot(now, self._alive[i])
+                                for i, st in enumerate(self._sup)},
+                },
             }
         rejects: Dict[str, int] = {}
         steals = 0

@@ -52,6 +52,10 @@ class ServiceMetrics:
         self._stream_samples = ns.counter("stream.samples")
         self._stream_wall = ns.counter("stream.wall_s")
         self._overlap = ns.histogram("stream.overlap_frac", window)
+        # circuit-breaker activity (repro.ual.service.breaker): trips
+        # land here so the registry view shows degradation cluster-wide
+        self._breaker_trips = ns.counter("breaker.trips")
+        self._degraded_samples = ns.counter("breaker.degraded_samples")
         # per-reason / per-tenant breakdowns stay plain dicts (dynamic
         # key sets; one lock, cheap updates)
         self._lock = threading.Lock()
@@ -97,6 +101,15 @@ class ServiceMetrics:
         with self._lock:
             for t in tenants:
                 self._tenant(t)["errors"] += 1
+
+    def record_breaker_trip(self) -> None:
+        """The breaker tripped (or re-opened) one class."""
+        self._breaker_trips.inc()
+
+    def record_degraded(self, samples: int) -> None:
+        """One sweep of ``samples`` requests executed on a fallback
+        backend instead of its class's primary."""
+        self._degraded_samples.inc(samples)
 
     def record_stream_span(self, chunks: int, samples: int, wall_s: float,
                            overlap: object = None) -> None:

@@ -34,12 +34,14 @@ import numpy as np
 
 from repro import obs
 from repro.analysis.verifier import VerifyError
+from repro.ual import faults
 from repro.ual.backends import get_backend
 from repro.ual.cache import MappingCache, default_cache
 from repro.ual.compiler import compile as ual_compile
 from repro.ual.engine import default_engine
 from repro.ual.executable import Executable
 from repro.ual.program import Program
+from repro.ual.service.breaker import CircuitBreaker
 from repro.ual.service.coalescer import Coalescer
 from repro.ual.service.metrics import ServiceMetrics
 from repro.ual.service.queue import (AdmissionQueue, Request, RequestTrace,
@@ -101,6 +103,18 @@ class Service:
     ``deadlines_ms``, or service-wide via ``default_deadline_ms``) drop
     requests that aged out before execution (``deadline-exceeded``).
 
+    **Graceful degradation**: micro-batches on degradable backends run
+    under a per-class circuit breaker (``repro.ual.service.breaker``).
+    After ``breaker_threshold`` consecutive primary-backend exec
+    failures a class trips to its bit-exact fallback (``pallas`` ->
+    ``sim``: both consume the same lowered artifact); a failed sweep is
+    also retried in place on the fallback, so callers see degraded
+    latency (``fut.info["degraded_to"]``), not errors.  After
+    ``breaker_cooldown_s`` a single half-open probe tries the primary
+    again and restores the class on success.  ``stats()["breaker"]``
+    reports per-class state; ``breaker_threshold=0`` disables the
+    breaker.
+
     **Replicated mode** (``replicas > 1`` or ``devices=...``): worker
     threads become ``ReplicaSlot``s behind a ``Router``
     (``repro.ual.cluster.replica``) — flush-ready micro-batches go to
@@ -123,6 +137,9 @@ class Service:
                  default_deadline_ms: Optional[float] = None,
                  deadlines_ms: Optional[Dict[str, float]] = None,
                  warmup_buckets: Optional[Sequence[int]] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 5.0,
+                 breaker_fallbacks: Optional[Dict[str, str]] = None,
                  start: bool = True) -> None:
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
@@ -140,6 +157,13 @@ class Service:
         self.deadlines_ms = dict(deadlines_ms or {})
         self.warmup_buckets = warmup_buckets
         self._cache = cache
+        #: per-class circuit breaker over degradable backends (pallas ->
+        #: sim by default — same lowered artifact, bit-exact fallback);
+        #: breaker_threshold=0 disables the breaker entirely
+        self._breaker: Optional[CircuitBreaker] = (
+            CircuitBreaker(breaker_threshold, breaker_cooldown_s,
+                           breaker_fallbacks)
+            if breaker_threshold > 0 else None)
 
         if replicas > 1 or devices is not None:
             from repro.ual.cluster.replica import Router
@@ -432,6 +456,7 @@ class Service:
     def _emit(self, batch: List[Request], *, early: bool = False) -> None:
         """Hand one flush-ready micro-batch to the execution side: the
         shared FIFO in plain mode, the Router in replicated mode."""
+        faults.dispatch_delay()      # no-op unless a fault plan is active
         if batch[0].trace is not None:
             now = time.perf_counter()
             for req in batch:
@@ -603,27 +628,73 @@ class Service:
             return [], None
         return live, exe
 
+    def _sweep(self, exe: Executable, live: List[Request], backend: str,
+               slot=None) -> Tuple[List[Dict[str, np.ndarray]],
+                                   Dict[str, object]]:
+        """One engine sweep on an explicit backend — the unit the
+        circuit breaker retries.  Device placement only rides along on
+        backends that support it (a degraded sim sweep must not receive
+        the pallas slot device).  The fault-injection hook sits inside
+        the caller's ``try`` so an injected failure takes the exact
+        path a real engine failure would."""
+        kw: Dict[str, object] = {}
+        if slot is not None and slot.device is not None:
+            if getattr(get_backend(backend), "supports_device", False):
+                kw["device"] = slot.device        # per-replica placement
+        faults.check_exec(backend)
+        return exe.run_batch_with_info(
+            [req.mem for req in live], n_iters=live[0].n_iters,
+            backend=backend, **kw)
+
     def _run_batch(self, batch: List[Request], slot=None) -> int:
         """Execute one micro-batch; returns how many requests actually
         rode the sweep (0 when every member was rejected first) so the
-        router's per-replica sample counters stay honest."""
+        router's per-replica sample counters stay honest.
+
+        Degradable backends (``CircuitBreaker.fallbacks``) run under the
+        breaker: an open class sweeps on its fallback outright, a failed
+        primary sweep is retried in place on the fallback (the batch
+        still resolves with bit-exact outputs — both backends consume
+        the same lowered artifact), and only a fallback failure reaches
+        the callers as an error."""
         live, exe = self._prepare(batch)
         if exe is None:
             return 0
         t_exec0 = time.perf_counter()
+        primary = live[0].target.backend
+        brk = self._breaker
+        fb: Optional[str] = None
+        probe = False
+        if brk is not None:
+            fb, probe = brk.plan(live[0].key, primary, t_exec0)
+        degraded_to: Optional[str] = fb
         try:
-            kw: Dict[str, object] = {}
-            if slot is not None and slot.device is not None:
-                be = get_backend(live[0].target.backend)
-                if getattr(be, "supports_device", False):
-                    kw["device"] = slot.device    # per-replica placement
-            outs, info = exe.run_batch_with_info(
-                [req.mem for req in live], n_iters=live[0].n_iters, **kw)
+            if fb is not None:
+                outs, info = self._sweep(exe, live, fb, slot)
+            else:
+                try:
+                    outs, info = self._sweep(exe, live, primary, slot)
+                    if brk is not None:
+                        brk.record_success(live[0].key, probe=probe)
+                except Exception:
+                    fallback = (brk.fallback_for(primary)
+                                if brk is not None else None)
+                    if fallback is None:
+                        raise
+                    if brk.record_failure(live[0].key, time.perf_counter(),
+                                          probe=probe):
+                        self._metrics.record_breaker_trip()
+                    outs, info = self._sweep(exe, live, fallback, slot)
+                    brk.record_degraded(live[0].key)
+                    degraded_to = fallback
         except Exception as exc:     # resolve, don't kill the worker
             self._metrics.record_error([req.tenant for req in live])
             for req in live:
                 req.response._resolve(exc=exc)
             return len(live)
+        if degraded_to is not None:
+            self._metrics.record_degraded(len(live))
+            info["degraded_to"] = degraded_to
         done = time.perf_counter()
         self._metrics.record_batch(len(live), float(info.get("wall_s", 0.0)))
         sps = info.get("throughput_sps")
@@ -642,6 +713,8 @@ class Service:
             latency = done - req.t_submit
             self._metrics.record_completed(req.tenant, latency)
             extra: Dict[str, object] = {}
+            if degraded_to is not None:
+                extra["degraded_to"] = degraded_to
             if req.trace is not None:
                 extra["trace"] = self._finish_trace(req,
                                                     time.perf_counter())
@@ -717,6 +790,8 @@ class Service:
         cache = self._cache if self._cache is not None else default_cache()
         snap["cache"] = cache.stats()
         snap["engine"] = default_engine().stats()
+        if self._breaker is not None:
+            snap["breaker"] = self._breaker.stats()
         if self._router is not None:
             snap["router"] = self._router.stats()
         return snap

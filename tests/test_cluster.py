@@ -21,6 +21,13 @@ Contract under test:
     writer winning the ``os.replace`` race,
   * ``ClusterService`` resolves parent-side futures bit-exact through
     worker processes and merges their stats into one cluster view,
+  * self-healing: a worker killed mid-batch (deterministic
+    ``FaultPlan``) strands no future — orphaned requests retry
+    transparently on live workers with bit-exact results, the dead
+    worker respawns under the ``RestartPolicy`` and rejoins warm off
+    the shared disk cache; with the retry/restart budgets at zero the
+    caller gets a ``worker-died`` verdict instead; shutdown racing a
+    respawn leaks no process,
   * a short soak keeps queue depth bounded and p99 finite.
 """
 import os
@@ -332,7 +339,8 @@ def test_cluster_service_parity_and_merged_stats(tmp_path):
     assert stats["completed"] == 16 and stats["rejected"] == 0
     assert stats["samples_per_s"] > 0 and stats["p99_ms"] is not None
     assert set(stats["routing"]["decisions"]) == {"affinity",
-                                                  "least_loaded"}
+                                                  "least_loaded", "retry"}
+    assert stats["routing"]["decisions"]["retry"] == 0  # no deaths here
     assert sum(stats["routing"]["decisions"].values()) == 16
     assert sorted(stats["per_worker"]) == [0, 1]
     for snap in stats["per_worker"].values():
@@ -349,6 +357,140 @@ def test_cluster_service_rejects_after_shutdown(tmp_path):
     resp = cs.submit(program, target,
                      program.random_inputs(np.random.default_rng(5)))
     assert resp.rejected and resp.reason == "shutdown"
+
+
+# ---------------------------------------------------------------------------
+# self-healing: kill/retry/respawn/warm-rejoin (deterministic fault plans)
+# ---------------------------------------------------------------------------
+
+def _wait_respawn(cs, widx, timeout=60.0):
+    """Poll supervision until worker ``widx`` is alive again post-restart;
+    returns its final supervision snapshot."""
+    deadline = time.time() + timeout
+    snap = None
+    while time.time() < deadline:
+        snap = cs.stats(timeout=30)["supervision"]["workers"][widx]
+        if snap["restarts"] >= 1 and snap["alive"]:
+            return snap
+        time.sleep(0.2)
+    raise AssertionError(f"worker {widx} never respawned: {snap}")
+
+
+def test_cluster_kill_midbatch_transparent_retry(tmp_path):
+    """Worker 0 is killed (hard exit, no goodbye) with requests in
+    flight: every future still resolves bit-exact — orphans ride retry
+    hops to worker 1 — and worker 0 respawns under the policy."""
+    program, target = _program(), _target()
+    rng = np.random.default_rng(7)
+    mems = [program.random_inputs(rng) for _ in range(24)]
+    plan = ual.FaultPlan([ual.FaultSpec("kill_worker", worker=0, after=3)])
+    with ual.ClusterService(
+            workers=2, max_batch=8, max_wait_ms=2, cache_dir=str(tmp_path),
+            worker_env=plan.to_env(),
+            restart_policy=ual.RestartPolicy(max_restarts=2,
+                                             backoff_base_s=0.1)) as cs:
+        resps = [cs.submit(program, target, m) for m in mems]
+        outs = [r.result(timeout=300) for r in resps]    # nothing lost
+        for mem, out in zip(mems, outs):
+            expect = _oracle(program, mem)
+            for name in program.outputs:
+                np.testing.assert_array_equal(out[name], expect[name])
+        assert any(r.info.get("retries", 0) >= 1 for r in resps), \
+            "the kill must strand (and retry) at least one request"
+        assert all(r.info.get("retries", 0) <= cs.max_retries
+                   for r in resps)
+        snap = _wait_respawn(cs, 0)
+        stats = cs.stats(timeout=30)
+    assert snap["deaths"] == 1 and snap["restarts"] == 1
+    assert snap["last_recovery_s"] is not None
+    sup = stats["supervision"]
+    assert sup["restarts_total"] == 1 and sup["deaths_total"] == 1
+    assert sup["retries_total"] == stats["routing"]["decisions"]["retry"] >= 1
+    assert sup["policy"]["max_restarts"] == 2
+
+
+def test_cluster_retry_exhaustion_yields_worker_died_verdict(tmp_path):
+    """Budgets at zero: the stranded request resolves with a
+    ``worker-died`` verdict (never hangs), and with no live worker left
+    later submits are rejected up front."""
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(8))
+    plan = ual.FaultPlan([ual.FaultSpec("kill_worker", worker=0)])
+    with ual.ClusterService(
+            workers=1, max_batch=4, max_wait_ms=2, cache_dir=str(tmp_path),
+            worker_env=plan.to_env(), max_retries=0,
+            restart_policy=ual.RestartPolicy(max_restarts=0)) as cs:
+        resp = cs.submit(program, target, mem)   # its arrival is the kill
+        with pytest.raises(ual.ServiceRejected) as err:
+            resp.result(timeout=120)
+        assert err.value.reason == "worker-died"
+        assert resp.info.get("retries") == 0
+        deadline = time.time() + 60
+        while cs.stats(timeout=10)["supervision"]["workers"][0]["alive"]:
+            assert time.time() < deadline, "death never detected"
+            time.sleep(0.1)
+        late = cs.submit(program, target, mem)
+        assert late.rejected and late.reason == "worker-died"
+        sup = cs.stats(timeout=10)["supervision"]
+    assert sup["workers"][0]["exhausted"] is True
+    assert sup["restarts_total"] == 0
+
+
+def test_cluster_respawned_worker_rejoins_warm(tmp_path):
+    """A respawned worker re-registers its classes and re-loads
+    artifacts from the shared disk cache: it serves again with ZERO
+    fresh mapping stores (disk hits only)."""
+    program, target = _program(), _target()
+    rng = np.random.default_rng(9)
+    mems = [program.random_inputs(rng) for _ in range(8)]
+    plan = ual.FaultPlan([ual.FaultSpec("kill_worker", worker=0, after=2)])
+    with ual.ClusterService(
+            workers=2, max_batch=4, max_wait_ms=2, cache_dir=str(tmp_path),
+            worker_env=plan.to_env(),
+            restart_policy=ual.RestartPolicy(max_restarts=1,
+                                             backoff_base_s=0.1)) as cs:
+        for r in [cs.submit(program, target, m) for m in mems]:
+            r.result(timeout=300)
+        _wait_respawn(cs, 0)
+        # sequential requests route to the warm-affine least-loaded
+        # worker 0; stay under the re-armed kill threshold (after=2)
+        outs = []
+        for mem in mems[:2]:
+            outs.append(cs.submit(program, target, mem).result(timeout=300))
+        for mem, out in zip(mems[:2], outs):
+            expect = _oracle(program, mem)
+            for name in program.outputs:
+                np.testing.assert_array_equal(out[name], expect[name])
+        stats = cs.stats(timeout=30)
+    w0 = stats["per_worker"].get(0)
+    assert w0 is not None, "respawned worker must answer stats"
+    mapping = w0["cache"]["mapping"]
+    assert mapping["stores"] == 0, "warm rejoin must not re-map"
+    assert mapping["disk_hits"] >= 1, "artifacts must come off shared disk"
+
+
+def test_cluster_shutdown_during_respawn_leaks_nothing(tmp_path):
+    """Shutdown racing the respawn window: the watchdog either installs
+    the replacement (then it is stopped like any worker) or reaps it —
+    no leaked process, no wedged watchdog thread."""
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(10))
+    plan = ual.FaultPlan([ual.FaultSpec("kill_worker", worker=0)])
+    cs = ual.ClusterService(
+        workers=1, max_batch=4, max_wait_ms=2, cache_dir=str(tmp_path),
+        worker_env=plan.to_env(),
+        restart_policy=ual.RestartPolicy(max_restarts=3,
+                                         backoff_base_s=0.05))
+    resp = cs.submit(program, target, mem)       # kills the only worker
+    deadline = time.time() + 60
+    while cs.stats(timeout=10)["supervision"]["workers"][0]["deaths"] < 1:
+        assert time.time() < deadline, "death never detected"
+        time.sleep(0.05)
+    cs.shutdown()                                # races the respawn
+    assert all(not p.is_alive() for p in cs._procs), "leaked worker"
+    assert all(not t.is_alive() for t in cs._threads), "wedged thread"
+    with pytest.raises(ual.ServiceRejected):     # resolved, not stuck
+        resp.result(timeout=5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,243 @@
+"""Deterministic fault injection + the self-healing service layers.
+
+Contract under test:
+
+  * ``FaultPlan`` round-trips through JSON and the ``REPRO_UAL_FAULTS``
+    environment fragment (how spawned cluster workers inherit a plan),
+    and specs validate their kind/counter fields,
+  * ``FaultInjector`` counters are deterministic: a spec passes
+    ``after`` matching events unharmed, fires exactly ``count`` times,
+    and filters (``backend=``, ``worker=``) gate the match,
+  * the ``Service`` circuit breaker: ``exec_fault`` on the pallas
+    backend degrades the failed sweep in place to the bit-exact ``sim``
+    fallback (callers see ``degraded_to``, never an error), trips the
+    class ``open`` after ``breaker_threshold`` consecutive failures,
+    re-opens on a failed half-open probe, and restores on a successful
+    one — visible in ``stats()["breaker"]``,
+  * ``delay_dispatch`` stalls a micro-batch's emission by the planned
+    amount (straggler emulation),
+  * a corrupted on-disk cache entry (bit flip or torn write) reads as a
+    miss, is quarantined to ``<name>.corrupt``, and the class simply
+    recompiles — parity preserved, ``stats.quarantined`` counted.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro import ual
+from repro.core.dfg import interpret
+from repro.ual import faults
+from repro.ual.service.breaker import CircuitBreaker
+
+
+def _program(kname="gemm"):
+    return ual.Program.from_kernel(kname)
+
+
+def _target(**knobs):
+    return ual.Target.from_name("hycube", rows=4, cols=4, **knobs)
+
+
+def _oracle(program, mem):
+    return interpret(program.dfg, mem, program.n_iters)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test starts and ends with fault injection inactive."""
+    faults.clear()
+    yield
+    faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# plan serialization + validation
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_env_round_trip(monkeypatch):
+    plan = ual.FaultPlan([
+        ual.FaultSpec("kill_worker", worker=1, after=6),
+        ual.FaultSpec("exec_fault", backend="pallas", after=2, count=3),
+        ual.FaultSpec("delay_dispatch", delay_ms=25.0),
+    ], seed=7)
+    assert ual.FaultPlan.from_json(plan.to_json()) == plan
+    env = plan.to_env()
+    assert set(env) == {faults.FAULTS_ENV}
+    assert ual.FaultPlan.from_env(env) == plan
+    assert ual.FaultPlan.from_env({}) is None
+    # the lazy in-process activation path (what a spawned worker does)
+    monkeypatch.setenv(faults.FAULTS_ENV, plan.to_json())
+    faults.clear()          # reset the memoized "no plan" state
+    faults._env_checked = False
+    inj = faults.active()
+    assert inj is not None and inj.plan == plan
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        ual.FaultSpec("meteor_strike")
+    with pytest.raises(ValueError):
+        ual.FaultSpec("exec_fault", after=-1)
+    with pytest.raises(ValueError):
+        ual.FaultSpec("exec_fault", count=0)
+
+
+def test_fault_injector_counters_are_deterministic():
+    plan = ual.FaultPlan([
+        ual.FaultSpec("exec_fault", backend="pallas", after=2, count=2),
+        ual.FaultSpec("delay_dispatch", delay_ms=40.0, count=1),
+    ])
+    inj = faults.FaultInjector(plan)
+    inj.check_exec("sim")            # backend filter: not a matching event
+    inj.check_exec("pallas")         # event 1: armed after 2 -> pass
+    inj.check_exec("pallas")         # event 2: pass
+    for _ in range(2):               # events 3, 4: fire exactly twice
+        with pytest.raises(ual.InjectedFault):
+            inj.check_exec("pallas")
+    inj.check_exec("pallas")         # count exhausted: pass again
+    assert [e["kind"] for e in inj.log] == ["exec_fault", "exec_fault"]
+    assert inj.dispatch_delay() == pytest.approx(0.04)
+    assert inj.dispatch_delay() == 0.0          # count=1: fired once
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker protocol (pure unit)
+# ---------------------------------------------------------------------------
+
+def test_breaker_trip_probe_restore_protocol():
+    brk = CircuitBreaker(threshold=2, cooldown_s=10.0)
+    key = ("p", "t", "pallas", 8)
+    assert brk.fallback_for("pallas") == "sim"
+    assert brk.fallback_for("interp") is None
+    assert brk.plan(key, "pallas", now=0.0) == (None, False)   # closed
+    assert not brk.record_failure(key, now=0.0)
+    assert brk.record_failure(key, now=1.0)                    # trips
+    assert brk.state_of(key) == "open"
+    assert brk.plan(key, "pallas", now=2.0) == ("sim", False)  # cooling
+    fb, probe = brk.plan(key, "pallas", now=12.0)              # elapsed
+    assert fb is None and probe
+    assert brk.state_of(key) == "half-open"
+    # concurrent sweep during the probe stays degraded
+    assert brk.plan(key, "pallas", now=12.0) == ("sim", False)
+    assert brk.record_failure(key, now=12.5, probe=True)       # re-open
+    assert brk.state_of(key) == "open"
+    fb, probe = brk.plan(key, "pallas", now=23.0)
+    assert fb is None and probe
+    assert brk.record_success(key, probe=True)                 # restore
+    assert brk.state_of(key) == "closed"
+    snap = brk.stats()
+    assert snap["trips_total"] == 1
+    (cls,) = snap["classes"].values()
+    assert cls["restores"] == 1 and cls["state"] == "closed"
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# breaker through the live service (pallas -> sim degradation)
+# ---------------------------------------------------------------------------
+
+def test_service_degrades_trips_and_restores_bit_exact():
+    """Three injected pallas sweep failures: the first two degrade in
+    place (trip at threshold=2), the third fails the half-open probe;
+    the next probe restores.  Every caller gets bit-exact outputs."""
+    program, target = _program(), _target(backend="pallas")
+    rng = np.random.default_rng(11)
+    mems = [program.random_inputs(rng) for _ in range(5)]
+    faults.install(ual.FaultPlan(
+        [ual.FaultSpec("exec_fault", backend="pallas", count=3)]))
+    cooldown = 0.8
+    with ual.Service(max_batch=4, max_wait_ms=5, breaker_threshold=2,
+                     breaker_cooldown_s=cooldown) as svc:
+        infos = []
+        for i, mem in enumerate(mems):
+            if i in (3, 4):
+                time.sleep(cooldown + 0.1)      # let the class half-open
+            resp = svc.submit(program, target, mem)
+            out = resp.result(timeout=300)
+            expect = _oracle(program, mem)
+            for name in program.outputs:
+                np.testing.assert_array_equal(out[name], expect[name])
+            infos.append(dict(resp.info))
+        stats = svc.stats()
+    # r0, r1: failed primary retried in place on sim; r2: open -> sim
+    # outright; r3: failed probe (3rd injected fault) -> sim; r4:
+    # successful probe -> back on pallas
+    assert [i.get("degraded_to") for i in infos] == \
+        ["sim", "sim", "sim", "sim", None]
+    brk = stats["breaker"]
+    assert brk["trips_total"] == 1
+    assert brk["degraded_batches_total"] == 4
+    (cls,) = brk["classes"].values()
+    assert cls["state"] == "closed" and cls["restores"] == 1
+    assert stats["completed"] == 5 and stats["errors"] == 0
+
+
+def test_service_without_fallback_surfaces_the_error():
+    """A non-degradable backend (sim has no fallback) still fails loudly:
+    the breaker never swallows an error it cannot route around."""
+    program, target = _program(), _target(backend="sim")
+    mem = program.random_inputs(np.random.default_rng(12))
+    faults.install(ual.FaultPlan(
+        [ual.FaultSpec("exec_fault", backend="sim", count=1)]))
+    with ual.Service(max_batch=4, max_wait_ms=5, breaker_threshold=2) as svc:
+        resp = svc.submit(program, target, mem)
+        with pytest.raises(ual.InjectedFault):
+            resp.result(timeout=300)
+        resp2 = svc.submit(program, target, mem)    # count spent: healthy
+        out = resp2.result(timeout=300)
+    expect = _oracle(program, mem)
+    for name in program.outputs:
+        np.testing.assert_array_equal(out[name], expect[name])
+
+
+def test_delay_dispatch_stalls_emission():
+    program, target = _program(), _target()
+    mem = program.random_inputs(np.random.default_rng(13))
+    with ual.Service(max_batch=4, max_wait_ms=5) as svc:
+        svc.submit(program, target, mem).result(timeout=300)  # warm class
+        faults.install(ual.FaultPlan(
+            [ual.FaultSpec("delay_dispatch", delay_ms=200.0, count=1)]))
+        t0 = time.perf_counter()
+        svc.submit(program, target, mem).result(timeout=300)
+        stalled = time.perf_counter() - t0
+    assert stalled >= 0.2, f"dispatch delay not applied ({stalled:.3f}s)"
+
+
+# ---------------------------------------------------------------------------
+# corrupted cache entries: miss + quarantine + recompile
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["truncate", "flip"])
+def test_corrupt_cache_entry_quarantined_and_recompiled(tmp_path, mode):
+    program, target = _program(), _target()
+    ual.compile(program, target, cache=ual.MappingCache(disk_dir=tmp_path))
+    assert faults.corrupt_cache_entry(tmp_path, which="mapping",
+                                      mode=mode) is not None
+    cache = ual.MappingCache(disk_dir=tmp_path)
+    exe2 = ual.compile(program, target, cache=cache)
+    rec = {p.name: p.stats for p in exe2.compile_info.passes}
+    assert rec["mapping"].get("cache") == "miss"    # poisoned != served
+    assert cache.stats.quarantined == 1
+    assert cache.stats()["quarantined"] == 1
+    corpses = list(tmp_path.glob("*.pkl.corrupt"))
+    assert len(corpses) == 1, "poisoned entry must be quarantined"
+    mem = program.random_inputs(np.random.default_rng(14))
+    out = exe2.run(**mem)
+    expect = _oracle(program, mem)
+    for name in program.outputs:
+        np.testing.assert_array_equal(out[name], expect[name])
+
+
+def test_corrupt_lowered_entry_is_also_quarantined(tmp_path):
+    program, target = _program(), _target()
+    ual.compile(program, target, cache=ual.MappingCache(disk_dir=tmp_path))
+    assert faults.corrupt_cache_entry(tmp_path, which="lowered",
+                                      mode="flip") is not None
+    cache = ual.MappingCache(disk_dir=tmp_path)
+    exe = ual.compile(program, target, cache=cache)
+    rec = {p.name: p.stats for p in exe.compile_info.passes}
+    assert rec["mapping"].get("cache") == "hit"     # mapping untouched
+    assert cache.stats.quarantined == 1
+    assert list(tmp_path.glob("*_low.pkl.corrupt"))

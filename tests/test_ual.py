@@ -141,12 +141,13 @@ def test_cache_aggregate_stats_view(tmp_path):
     ual.compile(program, target, cache=cache)          # warm: 1 hit
 
     agg = cache.stats()
-    assert set(agg) == {"mapping", "lowered"}
-    for layer in agg.values():
+    assert set(agg) == {"mapping", "lowered", "quarantined"}
+    for layer in (agg["mapping"], agg["lowered"]):
         assert layer["lookups"] == 2
         assert layer["hit_ratio"] == 0.5
         assert layer["stores"] == 1
         assert layer["disk_entries"] == 1              # one pair on disk
+    assert agg["quarantined"] == 0                     # nothing poisoned
     # the raw counters stay reachable exactly as before
     assert cache.stats.hits == 1 and cache.stats.lowered_hits == 1
 
